@@ -1,0 +1,126 @@
+"""Shared benchmark machinery: load study artifacts, build bundles per
+method, measure acceptance (TPF/alpha), model wall-clock speedup on the
+TPU-v5e roofline."""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.config.base import SpecConfig
+from repro.core import pipeline as pl
+from repro.data.synthetic import SyntheticDataset, TASKS
+from repro.training.run_study import load_study
+
+# ------------------------------------------------------ latency model ------
+# TPU v5e per chip; decode is memory-bound: a pass costs ~bytes/BW.
+PEAK = 197e12
+HBM_BW = 819e9
+
+# paper-scale reference model (Qwen3-8B-like, bf16) for the speedup model
+TARGET_BYTES = 8.2e9 * 2
+DRAFTER_BYTES = 0.35e9 * 2          # DFlash-style lightweight drafter
+
+
+def modeled_latency(n_tokens: int, params_bytes: float,
+                    extra_flops: float = 0.0) -> float:
+    """One forward pass over n_tokens with a KV-cache read folded into a
+    20% overhead (32k ctx): max(memory, compute)."""
+    mem = params_bytes * 1.2 / HBM_BW
+    comp = 2 * (params_bytes / 2) * n_tokens / PEAK + extra_flops / PEAK
+    return max(mem, comp)
+
+
+def modeled_speedup(alpha: float, n_draft_passes: int, tree_size: int,
+                    ar_baseline: Optional[float] = None) -> float:
+    """Paper Eq. 2: eta = alpha * L_target / (T_draft + T_verify)."""
+    l_target = modeled_latency(1, TARGET_BYTES)
+    t_draft = n_draft_passes * modeled_latency(16, DRAFTER_BYTES)
+    t_verify = modeled_latency(tree_size, TARGET_BYTES)
+    return alpha * l_target / (t_draft + t_verify)
+
+
+# ------------------------------------------------------------ measuring ----
+@dataclasses.dataclass
+class MethodResult:
+    alpha: float                    # mean accepted tokens / cycle (TPF)
+    speedup: float                  # modeled on the roofline (paper scale)
+    wall_tokens_per_s: float        # measured CPU wall (small scale)
+    conf: Optional[np.ndarray] = None
+    trunk_ok: Optional[np.ndarray] = None
+
+
+_STUDY = None
+
+
+def study():
+    global _STUDY
+    if _STUDY is None:
+        _STUDY = load_study()
+    return _STUDY
+
+
+def build_bundle(method: str, gamma: int = None, k: int = 4,
+                 temperature: float = 0.0) -> pl.SpecBundle:
+    tcfg, dcfg, dcfg_ar, params, meta = study()
+    g = gamma or meta["gamma"]
+    mode = {"d2sd": "d2sd", "dflash": "dflash", "naive_k": "naive_k",
+            "dflash_second": "dflash_second", "eagle": "eagle",
+            "d2sd_l3": "d2sd"}[method]
+    spec = SpecConfig(gamma=g, top_k_branches=k, mode=mode,
+                      temperature=temperature,
+                      third_level=(method == "d2sd_l3"))
+    import dataclasses as dc
+    d1cfg = dcfg_ar if method == "eagle" else dc.replace(dcfg, gamma=g)
+    d1 = params["ar"] if method == "eagle" else params["d1"]
+    d2 = params["d1"] if method in ("dflash_second", "naive_k") \
+        else params["d2"]
+    return pl.SpecBundle(tcfg, d1cfg, dc.replace(dcfg, gamma=g), spec,
+                         params["target"], d1, d2)
+
+
+def n_draft_passes(method: str, gamma: int) -> int:
+    return {"dflash": 1, "naive_k": 1, "d2sd": 2, "dflash_second": 2,
+            "d2sd_l3": 3, "eagle": gamma - 1}[method]
+
+
+def tree_size(method: str, gamma: int, k: int) -> int:
+    if method in ("dflash", "eagle"):
+        return gamma
+    base = gamma + k * (gamma - 1)
+    return base + k * (gamma - 1) if method == "d2sd_l3" else base
+
+
+def measure(method: str, task: str, *, n_prompts: int = 12,
+            prompt_len: int = 48, max_new: int = 96, gamma: int = None,
+            k: int = 4, temperature: float = 0.0,
+            seed: int = 0) -> MethodResult:
+    bundle = build_bundle(method, gamma=gamma, k=k, temperature=temperature)
+    g = bundle.spec.gamma
+    ds = SyntheticDataset(task, 1, 64, seed=777 + seed)
+    prompts = ds.prompts(n_prompts, prompt_len, offset=5 * 10 ** 6)
+    t0 = time.time()
+    out = pl.generate(bundle, prompts, max_new=max_new,
+                      key=jax.random.PRNGKey(seed), collect_stats=True)
+    dt = time.time() - t0
+    alpha = out["alpha"]
+    sp = modeled_speedup(alpha, n_draft_passes(method, g),
+                         tree_size(method, g, k))
+    conf = (np.concatenate([c.reshape(-1) for c in out["stats"]["conf"]])
+            if out["stats"]["conf"] else None)
+    tok = (np.concatenate([c.reshape(-1) for c in out["stats"]["trunk_ok"]])
+           if out["stats"]["trunk_ok"] else None)
+    return MethodResult(alpha=alpha, speedup=sp,
+                        wall_tokens_per_s=n_prompts * max_new / dt,
+                        conf=conf, trunk_ok=tok)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,35 @@
+"""Paper Fig. 2a: drafter confidence vs empirical accept rate — the
+calibration property that justifies Eq. 4's boundary posterior."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import measure
+
+
+def run(quick: bool = False):
+    r = measure("dflash", "math", n_prompts=6 if quick else 16,
+                max_new=64 if quick else 128)
+    conf, ok = r.conf, r.trunk_ok
+    assert conf is not None and ok is not None
+    bins = np.linspace(0, 1, 11)
+    idx = np.clip(np.digitize(conf, bins) - 1, 0, 9)
+    print("# Fig 2a — confidence bin vs empirical accept rate")
+    print("bin_lo,bin_hi,n,accept_rate")
+    rows = []
+    for b in range(10):
+        m = idx == b
+        if m.sum() == 0:
+            continue
+        rate = float(ok[m].mean())
+        print(f"{bins[b]:.1f},{bins[b + 1]:.1f},{int(m.sum())},{rate:.3f}")
+        rows.append((bins[b], rate, int(m.sum())))
+    # calibration error (weighted)
+    n_tot = sum(n for _, _, n in rows)
+    ece = sum(n * abs((lo + 0.05) - r_) for lo, r_, n in rows) / n_tot
+    print(f"# expected calibration error ~ {ece:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

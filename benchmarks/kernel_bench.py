@@ -1,0 +1,46 @@
+"""Kernel microbench: wall time of the pure-jnp reference paths on CPU (the
+Pallas kernels target TPU and are validated in interpret mode — their CPU
+interpret time is not meaningful), plus analytic kernel FLOPs for roofline
+cross-checks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(quick: bool = False):
+    print("# kernel reference microbench  name,us_per_call,derived")
+    cases = [
+        ("flash_ref_prefill", (2, 8, 2, 512, 512, 64)),
+        ("flash_ref_decode", (8, 8, 2, 16, 2048, 64)),
+    ]
+    if quick:
+        cases = cases[:1]
+    for name, (b, hq, hkv, tq, tkv, d) in cases:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, hq, tq, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, hkv, tkv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, hkv, tkv, d), jnp.float32)
+        f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v)[0])
+        us = _time(f, q, k, v)
+        flops = 4 * b * hq * tq * tkv * d
+        print(csv_row(name, us, f"flops={flops:.3g}"))
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only tableX]
+
+Prints ``name,us_per_call,derived`` CSV blocks per section. Requires the
+study artifacts (experiments/study) — run
+``PYTHONPATH=src python -m repro.training.run_study`` first; falls back to
+--quick-compatible behavior with a helpful error otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-study", action="store_true",
+                    help="only run benches that need no trained artifacts")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench
+    sections = [("kernels", lambda q: kernel_bench.run(q))]
+
+    study_dir = Path(__file__).resolve().parents[1] / "experiments" / "study"
+    if not args.skip_study:
+        if not (study_dir / "meta.json").exists():
+            print("!! study artifacts missing — run "
+                  "`PYTHONPATH=src python -m repro.training.run_study` "
+                  "first; running kernel section only.")
+        else:
+            from benchmarks import (fig2a_calibration, table1_gamma_scaling,
+                                    table3_end_to_end, table5_naive_k,
+                                    table6_dflash_second, table7_third_level)
+            sections += [
+                ("table1", lambda q: table1_gamma_scaling.run(q)),
+                ("table3", lambda q: table3_end_to_end.run(
+                    q, temps=(0.0,) if q else (0.0, 1.0))),
+                ("table5", lambda q: table5_naive_k.run(q)),
+                ("table6", lambda q: table6_dflash_second.run(q)),
+                ("table7", lambda q: table7_third_level.run(q)),
+                ("fig2a", lambda q: fig2a_calibration.run(q)),
+            ]
+
+    for name, fn in sections:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        try:
+            fn(args.quick)
+        except Exception as e:  # noqa
+            print(f"SECTION FAILED: {name}: {e!r}")
+        print(f"===== {name} done ({time.time() - t0:.0f}s) =====")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Tables 3/4 analogue: wall-clock speedup (roofline-modeled at paper
+scale) + mean acceptance length for DFlash / EAGLE-style AR / D2SD across
+task categories, greedy and T=1."""
+from __future__ import annotations
+
+from benchmarks.common import measure
+
+
+METHODS = ["dflash", "eagle", "d2sd"]
+
+
+def run(quick: bool = False, temps=(0.0, 1.0)):
+    tasks = ["math", "code", "chat"] if not quick else ["math", "chat"]
+    out = {}
+    for temp in temps:
+        print(f"# Table 3 — speedup x / acceptance alpha (T={temp:g})")
+        print("task," + ",".join(f"{m}_speedup,{m}_alpha" for m in METHODS))
+        for task in tasks:
+            cells = []
+            for m in METHODS:
+                r = measure(m, task, temperature=temp,
+                            n_prompts=4 if quick else 10,
+                            max_new=48 if quick else 96)
+                cells.append((r.speedup, r.alpha))
+                out[(temp, task, m)] = r
+            print(f"{task}," + ",".join(
+                f"{s:.2f},{a:.2f}" for s, a in cells))
+        avg = {m: (sum(out[(temp, t, m)].speedup for t in tasks) / len(tasks),
+                   sum(out[(temp, t, m)].alpha for t in tasks) / len(tasks))
+               for m in METHODS}
+        print("average," + ",".join(
+            f"{avg[m][0]:.2f},{avg[m][1]:.2f}" for m in METHODS))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Table 6: reuse DFlash as the second drafter (no variable-prefix
+training) inside the full cascade pipeline — isolates the VP recipe's
+contribution (Eq. 6/7)."""
+from __future__ import annotations
+
+from benchmarks.common import measure
+
+METHODS = ["dflash", "dflash_second", "d2sd"]
+
+
+def run(quick: bool = False):
+    tasks = ["math", "code", "chat"] if not quick else ["math"]
+    print("# Table 6 — DFlash -> DFlash vs D2SD (speedup x / alpha)")
+    print("task," + ",".join(f"{m}_speedup,{m}_alpha" for m in METHODS))
+    out = {}
+    for task in tasks:
+        cells = []
+        for m in METHODS:
+            r = measure(m, task, n_prompts=4 if quick else 10,
+                        max_new=48 if quick else 96)
+            cells.append((r.speedup, r.alpha))
+            out[(task, m)] = r
+        print(f"{task}," + ",".join(f"{s:.2f},{a:.2f}" for s, a in cells))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Table 7: stacking a third VP-Drafter level — alpha rises, modeled
+speedup falls (the cascade-depth asymmetry)."""
+from __future__ import annotations
+
+from benchmarks.common import measure
+
+METHODS = ["d2sd", "d2sd_l3"]
+
+
+def run(quick: bool = False):
+    tasks = ["math", "code"] if not quick else ["math"]
+    print("# Table 7 — D2SD vs +3rd draft level (speedup x / alpha)")
+    print("task," + ",".join(f"{m}_speedup,{m}_alpha" for m in METHODS))
+    out = {}
+    for task in tasks:
+        cells = []
+        for m in METHODS:
+            r = measure(m, task, n_prompts=4 if quick else 8,
+                        max_new=48 if quick else 80)
+            cells.append((r.speedup, r.alpha))
+            out[(task, m)] = r
+        print(f"{task}," + ",".join(f"{s:.2f},{a:.2f}" for s, a in cells))
+    return out
+
+
+if __name__ == "__main__":
+    run()

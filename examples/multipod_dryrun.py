@@ -1,0 +1,29 @@
+"""Example: lower + compile one serve_step and one train_step against the
+production 512-chip multi-pod mesh and print the compiled memory/roofline
+summary (the launch-scripts entry point for the full sweep is
+``python -m repro.launch.dryrun --all``).
+
+    PYTHONPATH=src python examples/multipod_dryrun.py [--arch qwen2.5-3b]
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    args = ap.parse_args()
+    from repro.launch.dryrun import run_cell
+    for shape in ("train_4k", "decode_32k"):
+        rec = run_cell(args.arch, shape, "multi")
+        print(json.dumps({k: rec[k] for k in
+                          ("arch", "shape", "mesh", "ok", "memory", "terms")
+                          if k in rec}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,265 @@
+"""Config system: dataclass configs for models, parallelism, training, serving.
+
+Every architecture in ``repro.configs`` builds a :class:`ModelConfig`;
+the D2SD engine additionally takes a :class:`SpecConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence, Tuple
+
+
+class AttnKind(str, enum.Enum):
+    GLOBAL = "global"          # full causal attention
+    LOCAL = "local"            # sliding-window causal attention
+    RECURRENT = "recurrent"    # RG-LRU block (attention-free)
+    RWKV = "rwkv"              # RWKV6 time-mix (attention-free)
+    CROSS = "cross"            # cross-attention to external context (VLM / enc-dec)
+
+
+class Family(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    HYBRID = "hybrid"
+    SSM = "ssm"
+    VLM = "vlm"
+    AUDIO = "audio"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # "einsum": GShard one-hot dispatch (small configs / smoke tests).
+    # "all_to_all": shard_map EP dispatch (production meshes).
+    dispatch: str = "einsum"
+    # DeepSeek-style shared experts that every token passes through.
+    num_shared_experts: int = 0
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: Family = Family.DENSE
+
+    num_layers: int = 4
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 512
+
+    # Layer pattern, repeated cyclically over depth, e.g.
+    # ("local","global") for gemma2, ("recurrent","recurrent","local") for
+    # recurrentgemma, ("rwkv",) for rwkv6. Cross-attn interleave handled by
+    # ``cross_attn_every`` (a cross block is *inserted* after every k-th layer).
+    layer_pattern: Tuple[str, ...] = ("global",)
+    sliding_window: int = 4096
+    logit_softcap: Optional[float] = None      # gemma2 final-logit softcap
+    attn_softcap: Optional[float] = None       # gemma2 attention-logit softcap
+
+    # MLP
+    mlp_act: str = "silu"                      # silu => SwiGLU; gelu => GeGLU-ish dense
+    mlp_gated: bool = True
+
+    # Attention details
+    qkv_bias: bool = False                     # qwen2-style QKV bias
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+
+    # MoE (None => dense FFN)
+    moe: Optional[MoEConfig] = None
+
+    # Encoder-decoder (whisper): encoder stack config
+    is_encoder_decoder: bool = False
+    enc_num_layers: int = 0
+    enc_max_len: int = 1500
+
+    # VLM / cross attention
+    cross_attn_every: int = 0                  # 0 = no cross-attn layers
+    num_vision_tokens: int = 0                 # stub patch-embedding count
+
+    # RWKV / recurrent
+    rwkv_head_dim: int = 64
+    rglru_width: Optional[int] = None          # RG-LRU recurrence width (d_model default)
+    conv1d_width: int = 4                      # temporal conv in recurrent block
+
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True                         # activation checkpoint per block
+    remat_policy: str = "full"                 # full | dots | none
+    scan_layers: bool = True                   # lax.scan over layer stack
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    use_post_norm: bool = False                # gemma2 sandwich norm
+
+    max_seq_len: int = 8192
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % self.num_kv_heads == 0, (
+            f"num_heads={self.num_heads} not divisible by kv={self.num_kv_heads}")
+
+    # ---- derived ----
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def pattern_for_depth(self) -> Tuple[str, ...]:
+        p = self.layer_pattern
+        reps = (self.num_layers + len(p) - 1) // len(p)
+        return tuple((p * reps)[: self.num_layers])
+
+    @property
+    def is_attention_free(self) -> bool:
+        kinds = set(self.pattern_for_depth())
+        return kinds <= {"recurrent", "rwkv"}
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if no layer does full global attention (long_500k eligible)."""
+        kinds = set(self.pattern_for_depth())
+        return "global" not in kinds
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, dff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        n_q = self.num_heads * hd
+        n_kv = self.num_kv_heads * hd
+        total = v * d  # embed
+        if not self.tie_embeddings:
+            total += v * d  # lm head
+        per_layer = {}
+        attn = d * n_q + 2 * d * n_kv + n_q * d
+        if self.qkv_bias:
+            attn += n_q + 2 * n_kv
+        ffn_dense = d * dff * (3 if self.mlp_gated else 2)
+        if self.moe is not None:
+            ffn = self.moe.num_experts * ffn_dense + d * self.moe.num_experts
+            ffn += self.moe.num_shared_experts * ffn_dense
+        else:
+            ffn = ffn_dense
+        rec = 0
+        if "recurrent" in self.pattern_for_depth():
+            w = self.rglru_width or d
+            rec = 2 * d * w + w * d + 2 * w + self.conv1d_width * w
+        rwkv = 0
+        if "rwkv" in self.pattern_for_depth():
+            rwkv = 4 * d * d + 2 * d * dff  # rough: time-mix + channel-mix
+        norms = 2 * d
+        for kind in self.pattern_for_depth():
+            if kind in ("global", "local"):
+                per = attn + ffn + norms
+            elif kind == "recurrent":
+                per = rec + ffn_dense + norms
+            elif kind == "rwkv":
+                per = rwkv + norms
+            else:
+                per = attn + ffn + norms
+            per_layer[kind] = per
+            total += per
+        if self.cross_attn_every:
+            n_cross = self.num_layers // self.cross_attn_every
+            total += n_cross * (attn + norms)
+        if self.is_encoder_decoder:
+            total += self.enc_num_layers * (attn + ffn_dense + norms)
+            total += self.num_layers * (attn + norms)  # decoder cross-attn
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        d, dff = self.d_model, self.d_ff
+        dense_ffn = d * dff * (3 if self.mlp_gated else 2)
+        inactive = (self.moe.num_experts - self.moe.top_k) * dense_ffn
+        return int(self.param_count() - self.num_layers * inactive)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """D2SD speculative decoding configuration (paper §3)."""
+    gamma: int = 16                 # block size (anchor + gamma-1 drafted)
+    top_k_branches: int = 4         # K
+    # Drafter conditioning: how many trailing target layers' features feed
+    # the FC projection (paper: multi-layer concat).
+    feature_layers: int = 3
+    # Ablation / mode switches (paper Tables 5/6/7):
+    mode: str = "d2sd"              # d2sd | dflash | naive_k | dflash_second | eagle
+    third_level: bool = False       # Table 7: stack one more VP level (top-1 each)
+    temperature: float = 0.0        # 0 => greedy verification, else lossless sampling
+    # VP-Drafter training recipe (Eqs. 6-7)
+    prefix_beta: float = 0.8        # truncated-geometric prior on prefix length
+    loss_tau: float = 4.0           # anchor-decay temperature in Eq. 7
+    # Engine details
+    max_target_len: int = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    data: int = 1
+    model: int = 1
+    pod: int = 1
+    # What the pod axis means: "dp" (extra data parallel) or "pipeline".
+    pod_role: str = "dp"
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"             # adamw | adamw8bit | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    total_steps: int = 300
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    # int8 gradient all-reduce with error feedback (distributed/collectives.py)
+    compress_grads: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 32
+    seq_len: int = 128
+    seed: int = 0
+    optimizer: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = False
+    log_every: int = 10
+    # fault tolerance
+    max_restarts: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned (shape) cell: train / prefill / decode / long-decode."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+ASSIGNED_SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", 4096, 256, "train"),
+    ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32768, 128, "decode"),
+    ShapeSpec("long_500k", 524288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeSpec:
+    for s in ASSIGNED_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

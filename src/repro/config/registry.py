@@ -1,0 +1,66 @@
+"""Architecture registry: ``--arch <id>`` lookup.
+
+Each module in ``repro.configs`` registers a full-size config and a reduced
+smoke config under the same id.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Tuple
+
+from repro.config.base import ModelConfig
+
+_FULL: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {}
+
+ARCH_IDS = (
+    "qwen2.5-3b",
+    "internlm2-20b",
+    "gemma2-2b",
+    "stablelm-3b",
+    "recurrentgemma-2b",
+    "kimi-k2-1t-a32b",
+    "grok-1-314b",
+    "llama-3.2-vision-11b",
+    "whisper-medium",
+    "rwkv6-1.6b",
+)
+
+_MODULES = {
+    "qwen2.5-3b": "qwen2_5_3b",
+    "internlm2-20b": "internlm2_20b",
+    "gemma2-2b": "gemma2_2b",
+    "stablelm-3b": "stablelm_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "grok-1-314b": "grok1_314b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "whisper-medium": "whisper_medium",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    # paper's own models (reduced-scale analogues)
+    "paper-target": "paper_target",
+    "paper-drafter": "paper_target",
+}
+
+
+def register(arch_id: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]) -> None:
+    _FULL[arch_id] = full
+    _SMOKE[arch_id] = smoke
+
+
+def _ensure(arch_id: str) -> None:
+    if arch_id not in _FULL:
+        mod = _MODULES.get(arch_id)
+        if mod is None:
+            raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    _ensure(arch_id)
+    return (_SMOKE if smoke else _FULL)[arch_id]()
+
+
+def all_archs() -> Tuple[str, ...]:
+    return ARCH_IDS

@@ -1,0 +1,42 @@
+"""The paper's own setting, reduced for CPU-scale empirical validation.
+
+Qwen3-8B-analogue target (small) + DFlash-style drafter configs used by the
+training / benchmark drivers. Full-scale Qwen3-8B-like config included for
+the dry-run path as 'paper-target'.
+"""
+from repro.config.base import Family, ModelConfig
+from repro.config.registry import register
+from repro.core.drafter import DrafterConfig
+
+
+def full() -> ModelConfig:
+    # Qwen3-8B-shaped: 36L, d=4096, 32H/8KV, ff 12288, vocab 151936
+    return ModelConfig(
+        name="paper-target", family=Family.DENSE,
+        num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=12288, vocab_size=151936, qk_norm=True, rope_theta=1e6,
+        max_seq_len=32768,
+    )
+
+
+def smoke() -> ModelConfig:
+    """The small target actually trained in the empirical study."""
+    return ModelConfig(
+        name="paper-target-small", family=Family.DENSE,
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+        d_ff=768, vocab_size=512, qk_norm=True, remat=False,
+        max_seq_len=2048, dtype="float32",
+    )
+
+
+def drafter_small(gamma: int = 16, causal: bool = False) -> DrafterConfig:
+    t = smoke()
+    return DrafterConfig(
+        d_model=192, num_layers=2, num_heads=4, num_kv_heads=2,
+        d_ff=512, vocab_size=t.vocab_size,
+        target_feature_dim=3 * t.d_model, gamma=gamma, causal=causal,
+        dtype="float32",
+    )
+
+
+register("paper-target", full, smoke)

@@ -1,0 +1,62 @@
+"""Beyond-paper: adaptive branch budgeting from the boundary posterior.
+
+The paper fixes K per deployment and observes (§4.2) that gains shrink on
+open-ended chat "where the boundary posterior r(i) is more diffuse". That
+observation inverts into a scheduler: spend second-draft branches only where
+they pay.
+
+  * If r(i) is CONCENTRATED (low entropy), one or two branches capture most
+    of the recovery mass — extra branches verify tokens that are already
+    dead.
+  * If r(i) is DIFFUSE (high entropy), more branches each carry real mass.
+  * If the all-accept probability prod(c) dominates, the first draft will
+    likely survive whole — skip the second draft entirely (saves a full
+    VP pass + (K)(gamma-1) verify tokens).
+
+``choose_k`` maps the posterior to a per-wave branch count inside a fixed
+[k_min, k_max] budget using posterior coverage: the smallest K whose top-K
+mass exceeds ``coverage`` of the total rejection mass. Pure function -> unit
+tested; the engine applies the wave-max so tree topology stays static per
+cycle (jit-friendly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def posterior_coverage_k(r, coverage: float = 0.85, k_max: int = 4):
+    """Smallest K with top-K posterior mass >= coverage * total mass. [B]."""
+    total = jnp.maximum(r.sum(-1, keepdims=True), 1e-9)
+    top = jax.lax.top_k(r, min(k_max, r.shape[-1]))[0]
+    cum = jnp.cumsum(top / total, axis=-1)
+    need = (cum < coverage).sum(-1) + 1
+    return jnp.minimum(need, k_max).astype(jnp.int32)
+
+
+def skip_second_draft(conf, threshold: float = 0.7):
+    """True where P(whole first draft accepted) = prod(c_k) >= threshold:
+    the VP pass is unlikely to add tokens. [B] bool."""
+    return jnp.prod(conf.astype(jnp.float32), axis=-1) >= threshold
+
+
+def choose_k(conf, r, *, coverage: float = 0.85, k_max: int = 4,
+             skip_threshold: float = 0.7):
+    """Per-example branch budget; 0 = skip the second draft.
+
+    Returns [B] int32 in {0, 1, .., k_max}. The engine takes max over the
+    wave (static topology per compiled cycle) and can bucket waves by K for
+    multi-program serving.
+    """
+    k = posterior_coverage_k(r, coverage, k_max)
+    return jnp.where(skip_second_draft(conf, skip_threshold), 0, k)
+
+
+def expected_recovery(r, fork_idx, gamma: int):
+    """E[extra accepted tokens | branch at fork i succeeds to depth d] upper
+    bound: sum_i r(i) * (gamma - 1 - i) over the selected forks — the napkin
+    value-of-branching used to tune coverage offline."""
+    g1 = r.shape[-1]
+    sel = jnp.take_along_axis(r, fork_idx, axis=-1)
+    remaining = (g1 - fork_idx).astype(jnp.float32)
+    return (sel * remaining).sum(-1)

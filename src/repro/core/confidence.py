@@ -1,0 +1,53 @@
+"""Rejection-boundary estimation from drafter confidence (paper §3.1-3.2).
+
+Eq. 3: c_k = max_v p_k(v)                       (per-position confidence)
+Eq. 4: r(i) = prod_{k<=i} c_k * (1 - c_{i+1})    (boundary posterior)
+Eq. 5: S = TopK_i r(i)                           (branch fork points)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def confidences(draft_logits, draft_tokens=None):
+    """Eq. 3. draft_logits: [..., G, V] over the G drafted positions.
+
+    If ``draft_tokens`` is given (sampled drafts), confidence is the
+    probability of the *chosen* token, else the max-probability (argmax).
+    """
+    probs = jax.nn.softmax(draft_logits.astype(jnp.float32), axis=-1)
+    if draft_tokens is None:
+        return probs.max(axis=-1)
+    return jnp.take_along_axis(probs, draft_tokens[..., None], axis=-1)[..., 0]
+
+
+def boundary_posterior(conf):
+    """Eq. 4. conf: [..., G] confidences of drafted positions 1..G.
+
+    Returns r: [..., G] where r[i] = P(exactly the first i drafted tokens are
+    accepted) for i = 0..G-1:
+        r[i] = prod_{k<i} c_k * (1 - c_i)
+    (the paper's indexing: i tokens accepted, position i+1 rejected).
+    The event "all G accepted" carries the leftover mass; it needs no branch.
+    """
+    cf = conf.astype(jnp.float32)
+    prefix = jnp.cumprod(cf, axis=-1)
+    prefix_excl = prefix / jnp.maximum(cf, 1e-30)       # prod_{k<i}
+    return prefix_excl * (1.0 - cf)
+
+
+def topk_prefixes(r, k: int):
+    """Eq. 5. r: [..., G] -> (scores [..., K], idx [..., K]).
+
+    idx[j] = prefix length i of the j-th branch (fork after i draft tokens).
+    """
+    return jax.lax.top_k(r, k)
+
+
+def select_branches(draft_logits, k: int, draft_tokens=None):
+    """Full §3.1-3.2: logits -> (conf, r, fork_idx [..., K])."""
+    conf = confidences(draft_logits, draft_tokens)
+    r = boundary_posterior(conf)
+    _, idx = topk_prefixes(r, k)
+    return conf, r, idx

@@ -1,0 +1,237 @@
+"""Candidate prefix trees for joint verification (paper §3.2-3.3).
+
+A tree is a static-shape node table (size N) with *per-example* traced parent
+pointers, so one implementation covers the comb-shaped D2SD tree, naive-K
+resample trees, third-level trees (forks on branches), and single chains.
+Node 0 is always the anchor (root). Invalid (padding) nodes carry
+valid=False and parent pointing at themselves.
+
+All fields are batched [B, N]; masks/paths use O(depth) gather iterations —
+no python loops over traced values.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Tree:
+    tokens: jnp.ndarray      # [B, N] int32
+    parent: jnp.ndarray      # [B, N] int32 (parent[0] = -1)
+    depth: jnp.ndarray       # [B, N] int32 (root depth 0)
+    valid: jnp.ndarray       # [B, N] bool
+    max_depth: int           # static bound on depth
+
+    @property
+    def n(self) -> int:
+        return self.parent.shape[-1]
+
+    @property
+    def b(self) -> int:
+        return self.parent.shape[0]
+
+
+jax.tree_util.register_pytree_node(
+    Tree,
+    lambda t: ((t.tokens, t.parent, t.depth, t.valid), t.max_depth),
+    lambda aux, ch: Tree(*ch, max_depth=aux),
+)
+
+
+def _gather(arr, idx):
+    """arr [B,N], idx [B,M] -> [B,M]."""
+    return jnp.take_along_axis(arr, idx, axis=1)
+
+
+def comb_tree(anchor, trunk_tokens, branch_tokens, fork_idx, gamma: int):
+    """Build the D2SD comb tree (per-example topology).
+
+    anchor:        [B] anchor token (bonus from previous cycle)
+    trunk_tokens:  [B, gamma-1] first-draft tokens t_1..t_{gamma-1}
+    branch_tokens: [B, K, gamma-1] second-draft tokens for slots 1..gamma-1
+                   (branch b uses slots fork_b+1..gamma-1; rest ignored)
+    fork_idx:      [B, K] prefix lengths i in 0..gamma-2 (Eq. 5 top-K)
+
+    Node layout (N = gamma + K*(gamma-1)):
+      node 0:           anchor (depth 0)
+      nodes 1..gamma-1: trunk token i at depth i
+      node gamma + b*(gamma-1) + j (j=0..gamma-2): branch b suffix node j,
+        slot fork_b+1+j, valid iff slot <= gamma-1.
+    """
+    b = anchor.shape[0]
+    g = gamma
+    k = branch_tokens.shape[1]
+    n = g + k * (g - 1)
+
+    node = jnp.arange(n)
+    trunk_part = node < g
+    bidx = jnp.clip((node - g) // (g - 1), 0, max(k - 1, 0))
+    j = jnp.clip(node - g - bidx * (g - 1), 0, g - 2)
+    fork = fork_idx[:, bidx]                               # [B, N]
+    slot = jnp.where(trunk_part[None], node[None], fork + 1 + j[None])
+    depth = slot
+    valid = jnp.where(trunk_part[None], True, slot <= g - 1)
+    # parents: trunk i -> i-1 ; branch j=0 -> trunk node fork ; j>0 -> prev
+    parent = jnp.where(
+        trunk_part[None], node[None] - 1,
+        jnp.where((j == 0)[None], fork, node[None] - 1))
+    parent = jnp.where(node[None] == 0, -1, parent)
+
+    slot_c = jnp.clip(slot - 1, 0, g - 2)                  # [B, N]
+    trunk_tok = _gather(trunk_tokens, slot_c)
+    br_tok = _gather(branch_tokens.reshape(b, -1),
+                     bidx[None] * (g - 1) + slot_c)
+    tokens = jnp.where(trunk_part[None], trunk_tok, br_tok)
+    tokens = jnp.where(node[None] == 0, anchor[:, None], tokens)
+    tokens = jnp.where(valid, tokens, 0)
+    return Tree(tokens=tokens.astype(jnp.int32),
+                parent=jnp.broadcast_to(parent, (b, n)).astype(jnp.int32),
+                depth=jnp.broadcast_to(depth, (b, n)).astype(jnp.int32),
+                valid=jnp.broadcast_to(valid, (b, n)), max_depth=g - 1)
+
+
+def extend_third_level(tree: Tree, branch_tokens3, fork_idx, fork3_idx,
+                       gamma: int):
+    """Table 7: stack a third VP level — one extra branch per second-level
+    branch, forked at that branch's own top-1 predicted boundary.
+
+    branch_tokens3: [B, K, gamma-1] third-draft tokens for slots 1..gamma-1
+    fork_idx:  [B, K] second-level forks i_b (as in comb_tree)
+    fork3_idx: [B, K] third-level fork slots s_b (absolute block slot,
+               s_b > i_b); the third branch of b hangs off branch b's node at
+               slot s_b and re-drafts slots s_b+1..gamma-1.
+    """
+    b, k = fork_idx.shape
+    g = gamma
+    n0 = tree.n
+    n3 = k * (g - 1)
+    node = jnp.arange(n3)
+    bidx = node // (g - 1)
+    j = node - bidx * (g - 1)
+    s = fork3_idx[:, bidx]                                  # [B, n3]
+    slot = s + 1 + j[None]
+    valid = slot <= g - 1
+    depth = slot
+    # parent: j=0 -> branch b's node at slot s (tree node g + b(g-1) + s-i_b-1)
+    ib = fork_idx[:, bidx]
+    parent_of_head = g + bidx[None] * (g - 1) + (s - ib - 1)
+    # if s == i_b (degenerate: fork at branch root) -> parent is trunk node i_b
+    parent_of_head = jnp.where(s > ib, parent_of_head, ib)
+    parent = jnp.where((j == 0)[None], parent_of_head, n0 + node[None] - 1)
+
+    slot_c = jnp.clip(slot - 1, 0, g - 2)
+    toks = _gather(branch_tokens3.reshape(b, -1),
+                   bidx[None] * (g - 1) + slot_c)
+    toks = jnp.where(valid, toks, 0)
+
+    tokens = jnp.concatenate([tree.tokens, toks.astype(jnp.int32)], axis=1)
+    parent_all = jnp.concatenate([tree.parent, parent.astype(jnp.int32)], axis=1)
+    depth_all = jnp.concatenate([tree.depth, depth.astype(jnp.int32)], axis=1)
+    valid_all = jnp.concatenate([tree.valid, valid], axis=1)
+    return Tree(tokens=tokens, parent=parent_all, depth=depth_all,
+                valid=valid_all, max_depth=tree.max_depth)
+
+
+def chain_tree(anchor, tokens):
+    """Single chain (DFlash / EAGLE baseline): tokens [B,G]."""
+    b, g = tokens.shape
+    n = g + 1
+    node = jnp.arange(n)
+    parent = jnp.broadcast_to(node - 1, (b, n))
+    toks = jnp.concatenate([anchor[:, None], tokens], axis=1)
+    return Tree(tokens=toks.astype(jnp.int32), parent=parent.astype(jnp.int32),
+                depth=jnp.broadcast_to(node, (b, n)).astype(jnp.int32),
+                valid=jnp.ones((b, n), bool), max_depth=g)
+
+
+def ancestor_mask(tree: Tree) -> jnp.ndarray:
+    """[B, N, N] bool: M[u, v] = v is ancestor-of-or-equal-to u."""
+    b, n = tree.parent.shape
+    m = jnp.broadcast_to(jnp.eye(n, dtype=bool), (b, n, n))
+    cur = tree.parent                                       # [B, N]
+    for _ in range(tree.max_depth):
+        hot = jax.nn.one_hot(jnp.clip(cur, 0, n - 1), n, dtype=bool)
+        m = m | (hot & (cur >= 0)[..., None])
+        cur = jnp.where(cur >= 0, _gather(tree.parent, jnp.clip(cur, 0, n - 1)),
+                        -1)
+    return m
+
+
+def attention_mask(tree: Tree) -> jnp.ndarray:
+    """Tree attention mask including validity: [B, N, N]."""
+    m = ancestor_mask(tree)
+    b, n = tree.parent.shape
+    return (m & tree.valid[:, None, :] & tree.valid[:, :, None]) | \
+        jnp.broadcast_to(jnp.eye(n, dtype=bool), (b, n, n))
+
+
+def positions(tree: Tree, base) -> jnp.ndarray:
+    """Absolute positions for RoPE: base + depth. base: [B] -> [B, N]."""
+    return (jnp.asarray(base)[:, None] + tree.depth).astype(jnp.int32)
+
+
+def children_table(tree: Tree, max_children: int) -> jnp.ndarray:
+    """[B, N, C] children per node (-1 padded), sibling order by node id
+    (trunk child first for comb trees — greedy tie-break prefers trunk)."""
+    b, n = tree.parent.shape
+    parent = jnp.where(tree.valid, tree.parent, -2)
+    order = jnp.arange(n)
+    same = (parent[:, None, :] == parent[:, :, None]) & \
+        (order[None, None, :] < order[None, :, None])
+    rank = same.sum(axis=2)                                 # [B, N]
+    ok = (parent >= 0) & (rank < max_children)
+    p_idx = jnp.where(ok, parent, n)
+    r_idx = jnp.where(ok, rank, 0)
+    tbl = jnp.full((b, n + 1, max_children), -1, jnp.int32)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, n))
+    tbl = tbl.at[bidx, p_idx, r_idx].set(
+        jnp.where(ok, order[None], -1).astype(jnp.int32), mode="drop")
+    return tbl[:, :n]
+
+
+def best_path(tree: Tree, accepted: jnp.ndarray):
+    """Longest-accepted-prefix across branches (paper step iv).
+
+    accepted: [B, N] bool. Returns (best [B], n_acc [B], path [B, D+1]) where
+    path[d] = node at depth d along the best root-to-leaf walk (padded with
+    the leaf beyond n_acc).
+    """
+    b, n = accepted.shape
+    acc = (accepted & tree.valid).at[:, 0].set(True)
+    score = jnp.where(acc, tree.depth, -1)
+    best = jnp.argmax(score, axis=1)
+    n_acc = jnp.take_along_axis(score, best[:, None], axis=1)[:, 0]
+
+    d_max = tree.max_depth
+    path_rev = [best]
+    cur = best
+    for _ in range(d_max):
+        cur = jnp.maximum(_gather(tree.parent, cur[:, None])[:, 0], 0)
+        path_rev.append(cur)
+    path_up = jnp.stack(path_rev, axis=1)             # [B, D+1] leaf->root
+    d_idx = jnp.arange(d_max + 1)[None, :]
+    take = jnp.clip(n_acc[:, None] - d_idx, 0, d_max)
+    path = jnp.take_along_axis(path_up, take, axis=1)
+    path = jnp.where(d_idx <= n_acc[:, None], path, best[:, None])
+    return best, n_acc, path
+
+
+def propagate_acceptance(tree: Tree, node_ok: jnp.ndarray) -> jnp.ndarray:
+    """accepted[n] = node_ok[n] AND all ancestors ok (root True). [B,N].
+
+    Iterates 2*max_depth+1 times: INVALID padding nodes chain through a
+    branch of up to max_depth-1 hops before reaching the fork, so their
+    hop distance to the root can reach ~2*max_depth (valid nodes are
+    within max_depth). The engine masks invalid nodes anyway; the extra
+    iterations make the property hold unconditionally.
+    """
+    b, n = node_ok.shape
+    acc = node_ok.at[:, 0].set(True)
+    parent_c = jnp.clip(tree.parent, 0, n - 1)
+    for _ in range(2 * tree.max_depth + 1):
+        acc = acc & jnp.where(tree.parent >= 0,
+                              _gather(acc, parent_c), True)
+    return acc

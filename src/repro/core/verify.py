@@ -1,0 +1,122 @@
+"""Verification: greedy longest-prefix and lossless multi-branch sampling.
+
+Greedy (T=0): node n is ok iff argmax(target logits at parent(n)) == token(n);
+acceptance propagates along ancestors; commit the deepest accepted node's
+path; bonus = target argmax at that node. This makes D2SD output *exactly*
+equal to pure greedy target decoding (property-tested).
+
+Sampling (T>0): SpecInfer-style recursive rejection sampling across sibling
+branches. At the frontier node we hold the target residual distribution p;
+children are tried in order: accept child c (token x, drafter dist q_c) with
+prob min(1, p(x)/q_c(x)); on rejection p <- normalize(max(p - q_c, 0)).
+If no child is accepted the bonus is sampled from the final residual. The
+committed-token distribution equals the target's exactly (lossless) whenever
+sibling tokens were drawn independently from their q_c's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import (Tree, best_path, children_table,
+                             propagate_acceptance)
+
+
+def greedy_verify(tree: Tree, target_logits):
+    """target_logits: [B, N, V] at every tree node.
+
+    Returns dict(best [B], n_acc [B], path [B, D+1], bonus [B],
+    accepted [B,N], ok [B,N]).
+    """
+    b, n, v = target_logits.shape
+    pred = jnp.argmax(target_logits, axis=-1)                 # [B, N]
+    parent_c = jnp.clip(tree.parent, 0, n - 1)
+    pred_at_parent = jnp.take_along_axis(pred, parent_c, axis=1)
+    ok = (pred_at_parent == tree.tokens) & tree.valid
+    accepted = propagate_acceptance(tree, ok)
+    best, n_acc, path = best_path(tree, accepted)
+    bonus = jnp.take_along_axis(pred, best[:, None], axis=1)[:, 0]
+    return {"best": best, "n_acc": n_acc, "path": path, "bonus": bonus,
+            "accepted": accepted, "ok": ok}
+
+
+def sampling_verify(tree: Tree, target_logits, draft_probs, key,
+                    max_children: int, temperature: float = 1.0):
+    """Lossless multi-branch speculative sampling.
+
+    draft_probs: [B, N, V] — the categorical q_n each node's token was drawn
+        from (root row ignored). Deterministic (argmax) drafts use a one-hot
+        q (valid: point-mass proposal).
+    Returns the same dict as greedy_verify (bonus sampled, not argmax).
+    """
+    b, n, v = target_logits.shape
+    kids = children_table(tree, max_children)                # [B, N, C]
+    p_target = jax.nn.softmax(
+        target_logits.astype(jnp.float32) / max(temperature, 1e-6), axis=-1)
+
+    d = tree.max_depth
+    keys = jax.random.split(key, d * max_children + 1)
+
+    def node_gather(arr, idx):
+        """arr [B,N,V] or [B,N], idx [B] -> [B,V] or [B]."""
+        if arr.ndim == 3:
+            return jnp.take_along_axis(arr, idx[:, None, None], axis=1)[:, 0]
+        return jnp.take_along_axis(arr, idx[:, None], axis=1)[:, 0]
+
+    cur = jnp.zeros((b,), jnp.int32)          # frontier node (accepted)
+    alive = jnp.ones((b,), bool)
+    n_acc = jnp.zeros((b,), jnp.int32)
+    p_res = node_gather(p_target, cur)        # residual target dist [B,V]
+    chosen_path = [cur]
+    accepted_nodes = jnp.zeros((b, n), bool).at[:, 0].set(True)
+
+    ki = 0
+    for _ in range(d):
+        nxt = cur
+        took = jnp.zeros((b,), bool)
+        for c in range(max_children):
+            child = jnp.take_along_axis(
+                kids[:, :, c], jnp.clip(cur, 0, n - 1)[:, None], 1)[:, 0]
+            has = (child >= 0) & alive & (~took)
+            child_s = jnp.clip(child, 0, n - 1)
+            tok = node_gather(tree.tokens, child_s)
+            qc = node_gather(draft_probs, child_s)            # [B,V]
+            px = jnp.take_along_axis(p_res, tok[:, None], 1)[:, 0]
+            qx = jnp.take_along_axis(qc, tok[:, None], 1)[:, 0]
+            u = jax.random.uniform(keys[ki], (b,)); ki += 1
+            accept = has & (u <= px / jnp.maximum(qx, 1e-30))
+            nxt = jnp.where(accept, child_s, nxt)
+            took = took | accept
+            rejected = has & (~accept)
+            p_new = jnp.maximum(p_res - qc, 0.0)
+            p_new = p_new / jnp.maximum(p_new.sum(-1, keepdims=True), 1e-30)
+            p_res = jnp.where(rejected[:, None], p_new, p_res)
+        moved = took
+        p_res = jnp.where(moved[:, None], node_gather(p_target, nxt), p_res)
+        n_acc = n_acc + moved.astype(jnp.int32)
+        alive = alive & moved
+        cur = nxt
+        chosen_path.append(cur)
+        accepted_nodes = accepted_nodes | (
+            jax.nn.one_hot(cur, n, dtype=bool) & moved[:, None])
+
+    bonus = jax.random.categorical(keys[ki],
+                                   jnp.log(jnp.maximum(p_res, 1e-30)))
+    path = jnp.stack(chosen_path, axis=1)                     # [B, D+1]
+    return {"best": cur, "n_acc": n_acc, "path": path, "bonus": bonus,
+            "accepted": accepted_nodes, "ok": accepted_nodes}
+
+
+def chain_prefix_accept_greedy(tokens, target_logits):
+    """Sequential prefix acceptance for branch-batched (SSM) verification.
+
+    tokens: [B, T] candidate tokens t_1..t_T whose parents are the previous
+        positions (t_0 = anchor handled by caller: logits[:, i] predicts
+        tokens[:, i]).
+    target_logits: [B, T, V] logits at [anchor, t_1..t_{T-1}].
+    Returns (n_acc [B], pred [B, T]).
+    """
+    pred = jnp.argmax(target_logits, axis=-1)
+    ok = pred == tokens
+    acc_prefix = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+    return acc_prefix.sum(axis=1), pred

@@ -1,0 +1,147 @@
+"""KV-sequence-parallel decode attention (flash-decoding across chips).
+
+At decode time the KV cache dominates memory and bandwidth; GQA archs with
+2-8 KV heads cannot fill a 16-way tensor axis, so we shard the cache along
+the SEQUENCE axis of the ``model`` mesh axis instead. Each shard computes
+flash partials (acc, m, l) over its cache slice; partials merge across the
+axis with a log-sum-exp psum (tiny: O(q_tokens * head_dim) per chip vs the
+KV bytes that stay put). The in-flight tree/block KV is replicated, its
+contribution computed identically on every shard and merged locally.
+
+This is the TPU analogue of the paper's cascade attention phase-1/phase-2
+split (shared long prefix once + small tree-local part), extended across
+chips — see DESIGN §3.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import (NEG_INF, attend, attend_chunked,
+                                    merge_attn_stats, softcap)
+from repro.distributed import sharding as sh
+
+
+def kv_seq_axis() -> Optional[str]:
+    """The mesh axis the KV cache sequence dim is sharded over, if any."""
+    mesh = sh.active_mesh()
+    if mesh is None:
+        return None
+    ax = sh._CTX.rules.get("kv_seq")
+    if isinstance(ax, (tuple, list)):
+        ax = ax[0] if ax else None
+    if ax is None or ax not in mesh.axis_names:
+        return None
+    return ax
+
+
+def sharded_cache_attend(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
+                         q_abs, window, attn_softcap, blk_mask, rolling,
+                         kv_chunk: int = 1024, merge_dtype=jnp.bfloat16):
+    """Single-softmax attention over [sharded cache ++ replicated block].
+
+    q: [B,Tq,Hq,Dh] (replicated over model axis)
+    cache_k/v: [B,S,Hkv,Dh] logically; S sharded over the kv_seq axis
+    blk_k/v: [B,Tblk,Hkv,Dh] replicated; blk_mask [B,Tq,Tblk] or [Tq,Tblk]
+    cache_len: [B] valid cache length; q_abs: [B,Tq] absolute positions.
+
+    merge_dtype: dtype of the cross-chip LSE-merge payload. bf16 halves the
+    dominant decode collective (partials psum) at bf16-model accuracy
+    (§Perf iteration 2); pass float32 for exact merging.
+    """
+    mesh = sh.active_mesh()
+    axis = kv_seq_axis()
+    assert mesh is not None and axis is not None
+    b, tq, hq, dh = q.shape
+    hkv = cache_k.shape[2]
+    if blk_mask is not None and blk_mask.ndim == 2:
+        blk_mask = jnp.broadcast_to(blk_mask[None], (b, tq, blk_mask.shape[-1]))
+    clen = jnp.asarray(cache_len)
+    if clen.ndim == 0:
+        clen = jnp.full((b,), clen)
+    qa = jnp.asarray(q_abs)
+    if qa.ndim == 1:
+        qa = jnp.broadcast_to(qa[None], (b, tq))
+    cap = cache_k.shape[1]
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = []
+    prod = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and b % (prod * sizes[a]) == 0:
+            batch_axes.append(a)
+            prod *= sizes[a]
+    bspec = tuple(batch_axes) if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None)
+
+    vary_cache = tuple(batch_axes) + (axis,)
+    vary_blk = tuple(batch_axes)
+
+    def shard_fn(qs, ck, cv, bk, bv, cl, qab, bm):
+        ax_idx = jax.lax.axis_index(axis)
+        s_loc = ck.shape[1]
+        offset = ax_idx * s_loc
+        # ---- cache slice partials ----
+        # mask by absolute key position (rolling caches store position
+        # p at slot p % cap, recovered against the local slot offset)
+        acc, m, l = _cache_stats(jax.lax.pvary(qs, (axis,)), ck, cv,
+                                 offset=offset, cap=cap,
+                                 clen=cl, qab=qab, window=window,
+                                 attn_softcap=attn_softcap, rolling=rolling,
+                                 kv_chunk=kv_chunk, vary_axes=vary_cache)
+        # ---- global LSE merge across the kv_seq axis ----
+        # normalize partials by the global max first so the psum payload can
+        # travel in bf16 without range loss (values in [0, l_local])
+        m_g = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum((l * corr).astype(merge_dtype),
+                           axis).astype(jnp.float32)
+        acc_g = jax.lax.psum((acc * corr[..., None]).astype(merge_dtype),
+                             axis).astype(jnp.float32)
+        # ---- replicated block part (computed identically per shard) ----
+        acc_b, m_b, l_b = attend_chunked(
+            qs, bk, bv, causal=False, q_offset=0, extra_mask=bm,
+            attn_softcap=attn_softcap, kv_chunk=max(bk.shape[1], 8),
+            return_stats=True, vary_axes=vary_blk)
+        out = merge_attn_stats([(acc_g, m_g, l_g), (acc_b, m_b, l_b)],
+                               qs.shape, qs.dtype)
+        return out
+
+    # check_vma=True: psum/pmax establish replication over the kv_seq axis,
+    # so shard_map emits NO output all-gather (the check_vma=False baseline
+    # re-gathered the merged output redundantly — §Perf iteration 1).
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(bspec), P(bspec, axis), P(bspec, axis), P(bspec),
+                  P(bspec), P(bspec), P(bspec), P(bspec)),
+        out_specs=P(bspec),
+        check_vma=True,
+    )(q, cache_k, cache_v, blk_k, blk_v, clen, qa, blk_mask)
+
+
+def _cache_stats(q, k, v, *, offset, cap, clen, qab, window, attn_softcap,
+                 rolling, kv_chunk, vary_axes=()):
+    """Flash partials over a local cache slice with absolute-position masks.
+    """
+    b, tq = q.shape[:2]
+    s_loc = k.shape[1]
+    jc = offset + jnp.arange(s_loc)[None, None, :]          # global slot ids
+    qpos = qab[:, :, None]
+    cl = clen[:, None, None]
+    if rolling:
+        last = cl - 1
+        abs_kpos = last - jnp.mod(last - jc, cap)
+        ok = (abs_kpos >= 0) & (abs_kpos < cl) & (abs_kpos <= qpos)
+        if window is not None:
+            ok &= abs_kpos > (qpos - window)
+    else:
+        ok = (jc < cl) & (jc <= qpos)
+        if window is not None:
+            ok &= jc > (qpos - window)
+    return attend_chunked(q, k, v, causal=False, q_offset=0, extra_mask=ok,
+                          attn_softcap=attn_softcap,
+                          kv_chunk=min(kv_chunk, s_loc), return_stats=True,
+                          vary_axes=vary_axes)

@@ -1,0 +1,201 @@
+"""Cascade tree-verification attention — the paper's verify op, TPU-native.
+
+One D2SD verification joins K+1 shared-prefix candidates (a comb prefix
+tree of T_tree tokens) against a LONG committed KV cache. FlashInfer's GPU
+cascade kernel is re-thought for TPU (DESIGN §3):
+
+  phase 1 (this Pallas kernel): the query block (all tree tokens, <= ~128)
+    stays resident in VMEM while the kernel sweeps the KV cache HBM->VMEM in
+    BlockSpec tiles, split-K over a grid axis so many cache slices progress
+    in parallel; each split emits un-normalized flash partials (acc, m, l).
+  phase 2 (jnp): partials merge by log-sum-exp with the tree-masked local
+    part (tree tokens attending each other via the comb ancestor mask) —
+    tiny (T_tree^2), not worth a kernel.
+
+This is also the decode kernel: a chain of 1 token is a degenerate tree.
+
+Masking supports per-example cache lengths (ragged batch), sliding windows
+(gemma2/recurrentgemma local layers; rolling-buffer position recovery), and
+per-query absolute positions (tree nodes sit at cache_len + depth).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _phase1_kernel(cache_len_ref, q_abs_ref,                  # SMEM
+                   q_ref, k_ref, v_ref,                       # VMEM blocks
+                   acc_ref, m_ref, l_ref,                     # outputs
+                   racc, rm, rl,                              # scratch
+                   *, bk, nk_inner, tq, window, softcap, scale, rolling,
+                   cap):
+    b = pl.program_id(0)
+    s = pl.program_id(2)       # split index
+    jj = pl.program_id(3)      # inner kv step within the split
+
+    @pl.when(jj == 0)
+    def _init():
+        racc[...] = jnp.zeros_like(racc)
+        rm[...] = jnp.full_like(rm, NEG_INF)
+        rl[...] = jnp.zeros_like(rl)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # [tq, D]
+    k = k_ref[0, 0].astype(jnp.float32)                      # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [tq, bk]
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+
+    clen = cache_len_ref[b]
+    base = (s * nk_inner + jj) * bk
+    slot = base + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+    qpos = q_abs_ref[pl.dslice(b * tq, tq)]                  # [tq]
+    qp = qpos[:, None]
+    if rolling:
+        last = clen - 1
+        kpos = last - jax.lax.rem(last - slot, cap)
+        ok = (kpos >= 0) & (kpos < clen) & (kpos <= qp)
+    else:
+        kpos = slot
+        ok = (kpos < clen) & (kpos <= qp)
+    if window is not None:
+        ok &= kpos > (qp - window)
+    sc = jnp.where(ok, sc, NEG_INF)
+
+    m_prev = rm[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=1))
+    p = jnp.exp(sc - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    rl[...] = rl[...] * alpha + p.sum(axis=1)
+    racc[...] = racc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    rm[...] = m_new
+
+    @pl.when(jj == nk_inner - 1)
+    def _final():
+        acc_ref[0, 0, 0] = racc[...]
+        m_ref[0, 0, 0] = rm[...]
+        l_ref[0, 0, 0] = rl[...]
+
+
+def cascade_phase1(q, cache_k, cache_v, *, cache_len, q_abs, window=None,
+                   attn_softcap=None, scale=None, rolling=False,
+                   n_splits=8, bk=512, interpret=False):
+    """q [B,Hq,Tq,D]; cache [B,Hkv,S,D] -> flash partials per split:
+    acc [B,Hq,ns,Tq,D], m/l [B,Hq,ns,Tq]."""
+    b, hq, tq, d = q.shape
+    hkv, s_len = cache_k.shape[1], cache_k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    bk = min(bk, s_len)
+    n_splits = max(1, min(n_splits, s_len // bk))
+    while s_len % (n_splits * bk) and n_splits > 1:
+        n_splits -= 1
+    pk = (-s_len) % (n_splits * bk)
+    if pk:
+        cache_k = jnp.pad(cache_k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        cache_v = jnp.pad(cache_v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    s_pad = s_len + pk
+    nk_inner = s_pad // (n_splits * bk)
+
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+    qa = jnp.broadcast_to(
+        jnp.asarray(q_abs, jnp.int32).reshape(b, tq), (b, tq)).reshape(-1)
+
+    kernel = functools.partial(
+        _phase1_kernel, bk=bk, nk_inner=nk_inner, tq=tq, window=window,
+        softcap=attn_softcap, scale=scale, rolling=rolling, cap=s_pad)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hq, n_splits, tq, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, hq, n_splits, tq), jnp.float32),
+        jax.ShapeDtypeStruct((b, hq, n_splits, tq), jnp.float32),
+    ]
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_splits, nk_inner),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, tq, d), lambda b_, h, s, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, s, j, g=g, nki=nk_inner:
+                         (b_, h // g, s * nki + j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, s, j, g=g, nki=nk_inner:
+                         (b_, h // g, s * nki + j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, tq, d),
+                         lambda b_, h, s, j: (b_, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, tq), lambda b_, h, s, j: (b_, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, tq), lambda b_, h, s, j: (b_, h, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, d), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(clen, qa, q, cache_k, cache_v)
+    return acc, m, l
+
+
+def cascade_attention(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
+                      q_abs, tree_mask, window=None, attn_softcap=None,
+                      scale=None, rolling=False, n_splits=8, bk=512,
+                      interpret=False):
+    """Full cascade verify: phase-1 kernel over the cache + jnp tree-local
+    phase-2 + LSE merge.
+
+    q [B,Hq,Tq,D]; cache [B,Hkv,S,D]; blk [B,Hkv,Tb,D];
+    tree_mask [B,Tq,Tb] (ancestor mask); returns [B,Hq,Tq,D].
+    """
+    b, hq, tq, d = q.shape
+    hkv = cache_k.shape[1]
+    g = hq // hkv
+    scale_v = scale if scale is not None else d ** -0.5
+    acc, m, l = cascade_phase1(
+        q, cache_k, cache_v, cache_len=cache_len, q_abs=q_abs, window=window,
+        attn_softcap=attn_softcap, scale=scale_v, rolling=rolling,
+        n_splits=n_splits, bk=bk, interpret=interpret)
+
+    # merge splits
+    m_g = m.max(axis=2)                                        # [B,Hq,Tq]
+    corr = jnp.exp(m - m_g[:, :, None])
+    l_g = (l * corr).sum(axis=2)
+    acc_g = (acc * corr[..., None]).sum(axis=2)               # [B,Hq,Tq,D]
+
+    # phase 2: tree-local attention (tiny) in fp32 jnp
+    qf = q.astype(jnp.float32) * scale_v
+    kq = jnp.repeat(blk_k.astype(jnp.float32), g, axis=1)
+    vq = jnp.repeat(blk_v.astype(jnp.float32), g, axis=1)
+    sc = jnp.einsum("bhqd,bhtd->bhqt", qf, kq)
+    if attn_softcap is not None:
+        sc = attn_softcap * jnp.tanh(sc / attn_softcap)
+    tm = tree_mask
+    if tm.ndim == 2:
+        tm = tm[None]
+    sc = jnp.where(tm[:, None], sc, NEG_INF)
+    m_b = sc.max(axis=-1)
+    p_b = jnp.exp(sc - m_b[..., None])
+    l_b = p_b.sum(axis=-1)
+    acc_b = jnp.einsum("bhqt,bhtd->bhqd", p_b, vq)
+
+    m_tot = jnp.maximum(m_g, m_b)
+    a1 = jnp.exp(m_g - m_tot)
+    a2 = jnp.exp(m_b - m_tot)
+    out = (acc_g * a1[..., None] + acc_b * a2[..., None]) / jnp.maximum(
+        l_g * a1 + l_b * a2, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU and execute their bodies in interpret mode for
+correctness validation — assignment contract).
+
+``flash_attention`` carries a custom_vjp wired to the Pallas backward
+kernels, so the same op serves training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cascade_attention as casc
+from repro.kernels import flash_attention as fa
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------- flash ----
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, causal, q_offset, window, kv_len, attn_softcap, scale,
+           interpret):
+    o, _ = fa.flash_attention_fwd(
+        q, k, v, causal=causal, q_offset=q_offset, window=window,
+        kv_len=kv_len, attn_softcap=attn_softcap, scale=scale,
+        interpret=interpret)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, q_offset, window, kv_len, attn_softcap,
+               scale, interpret):
+    o, lse = fa.flash_attention_fwd(
+        q, k, v, causal=causal, q_offset=q_offset, window=window,
+        kv_len=kv_len, attn_softcap=attn_softcap, scale=scale,
+        interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, q_offset, window, kv_len, attn_softcap, scale,
+               interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = fa.flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, q_offset=q_offset, window=window,
+        kv_len=kv_len, attn_softcap=attn_softcap, scale=scale,
+        interpret=interpret)
+    return dq.astype(q.dtype), dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, window=None,
+                    kv_len=None, attn_softcap=None, scale=None,
+                    interpret: Optional[bool] = None, layout="BTHD"):
+    """Differentiable flash attention.
+
+    layout "BTHD": q [B,T,Hq,D] (model-stack layout) or "BHTD" (kernel
+    layout). Returns attention output in the same layout.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if layout == "BTHD":
+        q_, k_, v_ = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
+    else:
+        q_, k_, v_ = q, k, v
+    o = _flash(q_, k_, v_, causal, q_offset, window, kv_len, attn_softcap,
+               scale, interpret)
+    return jnp.swapaxes(o, 1, 2) if layout == "BTHD" else o
+
+
+# -------------------------------------------------------------- cascade ----
+def cascade_attention(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
+                      q_abs, tree_mask, window=None, attn_softcap=None,
+                      scale=None, rolling=False, n_splits=8, bk=512,
+                      interpret: Optional[bool] = None, layout="BTHD"):
+    """The paper's cascade verify op (inference only)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    if layout == "BTHD":
+        q_, ck, cv, bk_, bv = (jnp.swapaxes(x, 1, 2)
+                               for x in (q, cache_k, cache_v, blk_k, blk_v))
+    else:
+        q_, ck, cv, bk_, bv = q, cache_k, cache_v, blk_k, blk_v
+    o = casc.cascade_attention(
+        q_, ck, cv, bk_, bv, cache_len=cache_len, q_abs=q_abs,
+        tree_mask=tree_mask, window=window, attn_softcap=attn_softcap,
+        scale=scale, rolling=rolling, n_splits=n_splits, bk=bk,
+        interpret=interpret)
+    return jnp.swapaxes(o, 1, 2) if layout == "BTHD" else o

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the kernels are allclose-tested against in
+interpret mode, sweeping shapes and dtypes (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(b, tq, tkv, *, causal, q_offset, window, kv_len):
+    q_off = jnp.broadcast_to(jnp.asarray(q_offset).reshape(-1), (b,))
+    qpos = jnp.arange(tq)[None, :, None] + q_off[:, None, None]
+    kpos = jnp.arange(tkv)[None, None, :]
+    m = jnp.ones((b, tq, tkv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > (qpos - window)
+    if kv_len is not None:
+        kl = jnp.broadcast_to(jnp.asarray(kv_len).reshape(-1), (b,))
+        m &= kpos < kl[:, None, None]
+    return m
+
+
+def flash_attention_ref(q, k, v, *, causal=True, q_offset=0, window=None,
+                        kv_len=None, attn_softcap=None, scale=None):
+    """q [B,Hq,Tq,D]; k,v [B,Hkv,Tkv,D] -> (o, lse)."""
+    b, hq, tq, d = q.shape
+    hkv, tkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kq = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kq)
+    if attn_softcap is not None:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    m = _mask(b, tq, tkv, causal=causal, q_offset=q_offset, window=window,
+              kv_len=kv_len)
+    s = jnp.where(m[:, None], s, NEG_INF)
+    mx = s.max(-1)
+    p = jnp.exp(s - mx[..., None])
+    l = p.sum(-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-30)[..., None],
+                   vq)
+    return o.astype(q.dtype), mx + jnp.log(jnp.maximum(l, 1e-30))
+
+
+def cascade_attention_ref(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
+                          q_abs, tree_mask, window=None, attn_softcap=None,
+                          scale=None, rolling=False):
+    """Single-softmax oracle over [cache ++ tree block] with absolute-
+    position masking identical to the kernel's semantics."""
+    b, hq, tq, d = q.shape
+    hkv, s_len = cache_k.shape[1], cache_k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    clen = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (b,))
+    qa = jnp.broadcast_to(jnp.asarray(q_abs).reshape(b, tq), (b, tq))
+
+    kq = jnp.concatenate([cache_k, blk_k], axis=2)
+    vq = jnp.concatenate([cache_v, blk_v], axis=2)
+    kq = jnp.repeat(kq, g, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(vq, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kq)
+    if attn_softcap is not None:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+
+    # cache mask (absolute positions, rolling-aware)
+    slot = jnp.arange(s_len)[None, None, :]
+    qp = qa[:, :, None]
+    cl = clen[:, None, None]
+    if rolling:
+        last = cl - 1
+        kpos = last - jnp.mod(last - slot, s_len)
+        ok_c = (kpos >= 0) & (kpos < cl) & (kpos <= qp)
+    else:
+        kpos = slot
+        ok_c = (kpos < cl) & (kpos <= qp)
+    if window is not None:
+        ok_c &= kpos > (qp - window)
+    tm = tree_mask if tree_mask.ndim == 3 else jnp.broadcast_to(
+        tree_mask[None], (b, tq, blk_k.shape[2]))
+    full = jnp.concatenate([ok_c, tm], axis=-1)
+    s = jnp.where(full[:, None], s, NEG_INF)
+    mx = s.max(-1)
+    p = jnp.exp(s - mx[..., None])
+    o = jnp.einsum("bhqk,bhkd->bhqd",
+                   p / jnp.maximum(p.sum(-1), 1e-30)[..., None], vq)
+    return o.astype(q.dtype)

@@ -1,0 +1,75 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant training loop on a reduced (smoke) config by
+default — full configs are exercised through the dry-run; pass --full only
+on real hardware.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.config.base import OptimizerConfig, TrainConfig
+from repro.config.registry import all_archs, get_config
+from repro.data.synthetic import SyntheticDataset
+from repro.launch.steps import optimizer_for
+from repro.models import api
+from repro.optim import optimizers as opt_lib
+from repro.training.trainer import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=all_archs())
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    hp = OptimizerConfig(name=optimizer_for(cfg).name, lr=args.lr,
+                         total_steps=args.steps,
+                         warmup_steps=max(args.steps // 10, 1))
+    tc = TrainConfig(batch_size=args.batch, seq_len=args.seq, optimizer=hp,
+                     checkpoint_every=max(args.steps // 4, 10),
+                     checkpoint_dir=args.ckpt_dir,
+                     log_every=max(args.steps // 20, 1))
+    print(f"training {cfg.name}: {cfg.param_count():.3g} params, "
+          f"opt={hp.name}")
+
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    opt_init, opt_update = opt_lib.make_optimizer(hp)
+    opt_state = opt_init(params)
+    ds = SyntheticDataset("mixture", args.batch, args.seq, seed=0)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.train_loss(p, batch, cfg))(params)
+        p2, o2, m = opt_update(grads, opt_state, params)
+        return p2, o2, {"loss": loss, **m}
+
+    state = {"params": params, "opt_state": opt_state, "step": 0}
+    if args.resume:
+        from repro.checkpoint.checkpointer import Checkpointer
+        ck = Checkpointer(args.ckpt_dir)
+        if ck.latest_step() is not None:
+            restored, extra = ck.restore(
+                {"params": params, "opt_state": opt_state})
+            state.update(params=restored["params"],
+                         opt_state=restored["opt_state"],
+                         step=int(extra["step"]))
+            ds.load_state_dict(extra["data"])
+            print(f"resumed from step {state['step']}")
+    out = train(step_fn, state, ds, tc)
+    print(f"done: final loss {out['metrics'][-1]['loss']:.4f}, "
+          f"restarts={out['restarts']}, stragglers={out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Unified per-architecture model API: init / train loss / batch synthesis.
+
+Dispatches on the config family: encoder-decoder (whisper) composes an
+encoder; VLM/audio batches carry stub modality embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, ShapeSpec
+from repro.models import encdec, lm
+
+
+def init_model(key, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_init(key, cfg)
+    return lm.lm_init(key, cfg)
+
+
+def decoder_params(params, cfg: ModelConfig):
+    return params["decoder"] if cfg.is_encoder_decoder else params
+
+
+def train_loss(params, batch, cfg: ModelConfig, **kw):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_loss(params, batch, cfg, **kw)
+    ctx = batch.get("image_embeds")
+    return lm.loss_fn(params, batch, cfg, ctx=ctx, **kw)
+
+
+def make_batch(key, cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Random but well-formed training batch (smoke tests / dry-run shapes)."""
+    ks = jax.random.split(key, 3)
+    toks = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size,
+                              dtype=jnp.int32)
+    out = {"tokens": toks,
+           "labels": jnp.roll(toks, -1, axis=1),
+           "mask": jnp.ones((batch, seq), jnp.float32)}
+    if cfg.is_encoder_decoder:
+        out["audio_feats"] = jax.random.normal(
+            ks[1], (batch, cfg.enc_max_len, cfg.d_model), jnp.bfloat16)
+    elif cfg.cross_attn_every:
+        out["image_embeds"] = jax.random.normal(
+            ks[2], (batch, max(cfg.num_vision_tokens, 1), cfg.d_model),
+            jnp.bfloat16)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStruct stand-ins for ``make_batch`` (no allocation)."""
+    sds = jax.ShapeDtypeStruct
+    out = {"tokens": sds((batch, seq), jnp.int32),
+           "labels": sds((batch, seq), jnp.int32),
+           "mask": sds((batch, seq), jnp.float32)}
+    if cfg.is_encoder_decoder:
+        out["audio_feats"] = sds((batch, cfg.enc_max_len, cfg.d_model),
+                                 jnp.bfloat16)
+    elif cfg.cross_attn_every:
+        out["image_embeds"] = sds(
+            (batch, max(cfg.num_vision_tokens, 1), cfg.d_model), jnp.bfloat16)
+    return out

@@ -1,0 +1,360 @@
+"""Transformer blocks + scan-over-layers stack.
+
+The stack is organized as ``n_periods`` repetitions of the config's layer
+pattern (plus an unrolled tail when depth % period != 0), scanned with
+``lax.scan`` so HLO size is O(1) in depth. Params and per-layer state are
+stacked along a leading period axis.
+
+Block kinds: "global" / "local" attention, "recurrent" (RG-LRU),
+"rwkv" (RWKV6). A block optionally carries a cross-attention sub-layer
+(VLM / enc-dec decoder).
+
+Modes (driven by arguments, not flags):
+  * train:       cache=None                     -> causal self-attention
+  * prefill:     cache given, write_kv=True     -> attend self, write cache
+  * decode/verify: cache given, write_kv=False  -> attend [cache ++ self]
+                   with optional ``extra_mask`` (tree mask); new KV returned
+                   to the caller for post-acceptance commit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import param as pm
+from repro.models.attention import attn_init, project_qkv, out_proj, attend
+from repro.models.layers import rmsnorm, rmsnorm_init, dense
+from repro.models.mlp import mlp, mlp_init
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv as rwkv_lib
+from repro.distributed.sharding import constrain
+
+
+# ------------------------------------------------------------ period spec --
+@dataclasses.dataclass(frozen=True)
+class BlockSpec2:
+    kind: str            # global | local | recurrent | rwkv
+    cross: bool = False
+
+
+def period_spec(cfg: ModelConfig) -> Tuple[Tuple[BlockSpec2, ...], int,
+                                           Tuple[BlockSpec2, ...]]:
+    """Return (period, n_periods, tail) covering cfg.num_layers layers."""
+    pat = list(cfg.layer_pattern)
+    ce = cfg.cross_attn_every
+    if ce:
+        # expand pattern to lcm so cross alignment is periodic
+        import math
+        plen = len(pat)
+        eff = math.lcm(plen, ce)
+        pat = (pat * (eff // plen))
+        spec = tuple(BlockSpec2(k, cross=((i + 1) % ce == 0))
+                     for i, k in enumerate(pat))
+    else:
+        spec = tuple(BlockSpec2(k) for k in pat)
+    plen = len(spec)
+    n_periods = cfg.num_layers // plen
+    tail_n = cfg.num_layers - n_periods * plen
+    # tail layers continue the pattern
+    tail = tuple(
+        BlockSpec2(pat[i % len(pat)] if not ce else spec[i % plen].kind,
+                   cross=spec[i % plen].cross if ce else False)
+        for i in range(tail_n))
+    return spec, n_periods, tail
+
+
+# ----------------------------------------------------------------- block ---
+def block_init(key, cfg: ModelConfig, spec: BlockSpec2):
+    ks = pm.split(key, 8)
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model)}
+    if spec.kind in ("global", "local"):
+        p["attn"] = attn_init(ks[0], cfg)
+    elif spec.kind == "recurrent":
+        p["rec"] = rglru_lib.rglru_block_init(ks[0], cfg)
+    elif spec.kind == "rwkv":
+        p["rwkv_tm"] = rwkv_lib.time_mix_init(ks[0], cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.kind == "rwkv":
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["rwkv_cm"] = rwkv_lib.channel_mix_init(ks[1], cfg)
+    else:
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        if cfg.moe is not None:
+            p["ffn"] = moe_lib.moe_init(ks[1], cfg)
+        else:
+            p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_gated)
+    if spec.cross:
+        p["ln_x"] = rmsnorm_init(cfg.d_model)
+        p["xattn"] = attn_init(ks[2], cfg, cross=True)
+    if cfg.use_post_norm:
+        p["ln1_post"] = rmsnorm_init(cfg.d_model)
+        p["ln2_post"] = rmsnorm_init(cfg.d_model)
+    return p
+
+
+def block_state_init(cfg: ModelConfig, spec: BlockSpec2, batch: int,
+                     max_len: int, ctx_len: int = 0, dtype=jnp.bfloat16):
+    """Per-layer decoding state."""
+    st: Dict[str, Any] = {}
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    if spec.kind in ("global", "local"):
+        cap = max_len if spec.kind == "global" else min(max_len, _window_cap(cfg))
+        st["k"] = jnp.zeros((batch, cap, hkv, dh), dtype)
+        st["v"] = jnp.zeros((batch, cap, hkv, dh), dtype)
+    elif spec.kind == "recurrent":
+        st.update(rglru_lib.rglru_state_init(cfg, batch))
+    elif spec.kind == "rwkv":
+        st.update(rwkv_lib.rwkv_state_init(cfg, batch))
+    if spec.cross:
+        st["ck"] = jnp.zeros((batch, max(ctx_len, 1), hkv, dh), dtype)
+        st["cv"] = jnp.zeros((batch, max(ctx_len, 1), hkv, dh), dtype)
+    return st
+
+
+def _window_cap(cfg: ModelConfig) -> int:
+    # local layers never need more KV than the window
+    return cfg.sliding_window
+
+
+def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
+                state=None, cache_len=None, positions=None,
+                write_kv: bool = False, extra_mask=None, ctx=None,
+                attn_impl: str = "auto", kv_chunk: int = 1024,
+                snap_at=None, attend_cache_on_write: bool = False):
+    """Apply one block. Returns (y, new_state, kv_out).
+
+    kv_out: (k_self, v_self) of this pass (None for attention-free blocks) —
+    used by verification to commit accepted KV without recompute.
+    snap_at: optional [B] — for replay-commit: recurrent states reflect
+    exactly snap_at consumed tokens; attention KV writes beyond snap_at are
+    dropped.
+    """
+    new_state = dict(state) if state is not None else None
+    kv_out = None
+    window = cfg.sliding_window if spec.kind == "local" else None
+
+    # ---- cross-attention sub-layer (before self, Flamingo/Llama-vision) ----
+    if spec.cross:
+        h = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        if ctx is not None:
+            # (re)compute cross KV from context; cache it if we have state
+            ck = dense(p["xattn"]["wk"], ctx).reshape(
+                ctx.shape[0], ctx.shape[1], cfg.num_kv_heads, cfg.head_dim)
+            cv = dense(p["xattn"]["wv"], ctx).reshape(
+                ctx.shape[0], ctx.shape[1], cfg.num_kv_heads, cfg.head_dim)
+            if new_state is not None:
+                new_state["ck"] = ck.astype(new_state["ck"].dtype)
+                new_state["cv"] = cv.astype(new_state["cv"].dtype)
+        else:
+            assert state is not None, "cross block needs ctx or cached cross-KV"
+            ck, cv = state["ck"], state["cv"]
+        b, t, _ = h.shape
+        q = dense(p["xattn"]["wq"], h).reshape(b, t, cfg.num_heads, cfg.head_dim)
+        xo = attend(q, ck, cv, causal=False, q_offset=0,
+                    attn_softcap=cfg.attn_softcap, impl=attn_impl,
+                    kv_chunk=kv_chunk)
+        x = x + out_proj(p["xattn"], xo)
+
+    # ---- mixer ----
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if spec.kind in ("global", "local"):
+        q, k, v = project_qkv(p["attn"], h, cfg, positions=positions)
+        if state is None:
+            y = attend(q, k, v, causal=True, q_offset=0, window=window,
+                       extra_mask=extra_mask, attn_softcap=cfg.attn_softcap,
+                       impl=attn_impl, kv_chunk=kv_chunk)
+        else:
+            cap = state["k"].shape[1]
+            rolling = spec.kind == "local"
+            if write_kv:
+                if attend_cache_on_write:
+                    # replay-commit: attend [cache ++ block], then write
+                    kk = jnp.concatenate([state["k"].astype(k.dtype), k], 1)
+                    vv = jnp.concatenate([state["v"].astype(v.dtype), v], 1)
+                    q_abs = (positions if positions is not None else
+                             jnp.asarray(cache_len)[..., None]
+                             + jnp.arange(q.shape[1]))
+                    y = _attend_cache_plus_block(
+                        q, kk, vv, cache_cap=cap, cache_len=cache_len,
+                        q_abs=q_abs, window=window, extra_mask=extra_mask,
+                        attn_softcap=cfg.attn_softcap, impl=attn_impl,
+                        kv_chunk=kv_chunk, rolling=rolling)
+                else:
+                    # prefill from empty context: causal self-attention
+                    y = attend(q, k, v, causal=True, q_offset=0, window=window,
+                               attn_softcap=cfg.attn_softcap, impl=attn_impl,
+                               kv_chunk=kv_chunk)
+                new_state["k"] = _scatter_kv(state["k"], k, cache_len, rolling,
+                                             write_len=snap_at)
+                new_state["v"] = _scatter_kv(state["v"], v, cache_len, rolling,
+                                             write_len=snap_at)
+            else:
+                # decode/verify: single softmax over [cache ++ self-block]
+                if positions is not None:
+                    q_abs = positions
+                else:
+                    q_abs = jnp.asarray(cache_len)[..., None] + jnp.arange(
+                        q.shape[1])
+                y = None
+                from repro.distributed import spdecode
+                axis = spdecode.kv_seq_axis()
+                if axis is not None:
+                    from repro.distributed.sharding import active_mesh
+                    n_shards = dict(zip(active_mesh().axis_names,
+                                        active_mesh().devices.shape))[axis]
+                    if cap % n_shards == 0 and cap // n_shards >= 128:
+                        blk_mask = extra_mask
+                        if blk_mask is None:
+                            tb = k.shape[1]
+                            blk_mask = jnp.tril(jnp.ones((tb, tb), bool))
+                        y = spdecode.sharded_cache_attend(
+                            q, state["k"].astype(k.dtype),
+                            state["v"].astype(v.dtype), k, v,
+                            cache_len=cache_len, q_abs=q_abs, window=window,
+                            attn_softcap=cfg.attn_softcap, blk_mask=blk_mask,
+                            rolling=rolling, kv_chunk=kv_chunk)
+                if y is None:
+                    kk = jnp.concatenate(
+                        [state["k"].astype(k.dtype), k], axis=1)
+                    vv = jnp.concatenate(
+                        [state["v"].astype(v.dtype), v], axis=1)
+                    y = _attend_cache_plus_block(
+                        q, kk, vv, cache_cap=cap, cache_len=cache_len,
+                        q_abs=q_abs, window=window, extra_mask=extra_mask,
+                        attn_softcap=cfg.attn_softcap, impl=attn_impl,
+                        kv_chunk=kv_chunk, rolling=rolling)
+                kv_out = (k, v)
+        y = out_proj(p["attn"], y)
+    elif spec.kind == "recurrent":
+        y, rec_state = rglru_lib.rglru_block(
+            p["rec"], h, cfg,
+            state={k2: state[k2] for k2 in rglru_lib.STATE_KEYS} if state is not None else None,
+            snap_at=snap_at)
+        if new_state is not None:
+            new_state.update(rec_state)
+    elif spec.kind == "rwkv":
+        y, tm_state = rwkv_lib.time_mix(
+            p["rwkv_tm"], h, cfg,
+            state={k2: state[k2] for k2 in rwkv_lib.TM_STATE_KEYS} if state is not None else None,
+            snap_at=snap_at)
+        if new_state is not None:
+            new_state.update(tm_state)
+    else:
+        raise ValueError(spec.kind)
+
+    if cfg.use_post_norm:
+        y = rmsnorm(p["ln1_post"], y, cfg.norm_eps)
+    x = x + y
+    x = constrain(x, ("batch", "act_seq", "embed"))
+
+    # ---- ffn ----
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if spec.kind == "rwkv":
+        y, cm_state = rwkv_lib.channel_mix(
+            p["rwkv_cm"], h, cfg,
+            state={k2: state[k2] for k2 in rwkv_lib.CM_STATE_KEYS} if state is not None else None,
+            snap_at=snap_at)
+        if new_state is not None:
+            new_state.update(cm_state)
+    elif cfg.moe is not None:
+        y = moe_lib.moe_apply(p["ffn"], h, cfg)
+    else:
+        y = mlp(p["ffn"], h, cfg.mlp_act, cfg.mlp_gated)
+    if cfg.use_post_norm:
+        y = rmsnorm(p["ln2_post"], y, cfg.norm_eps)
+    x = x + y
+    x = constrain(x, ("batch", "act_seq", "embed"))
+    return x, new_state, kv_out
+
+
+def _scatter_kv(buf, new, start, rolling: bool, write_len=None):
+    """Write [B,T,H,D] into [B,cap,H,D] at ``start`` (scalar or per-example
+    [B]; mod cap when rolling). ``write_len`` [B]: entries beyond it are
+    dropped (partial-acceptance replay)."""
+    b, cap = buf.shape[:2]
+    t = new.shape[1]
+    new = new.astype(buf.dtype)
+    start = jnp.asarray(start)
+    if rolling and t >= cap and write_len is None:
+        # only the last ``cap`` tokens survive a full wrap; write them in one
+        # aligned pass (avoids duplicate-index scatter nondeterminism)
+        new = new[:, -cap:]
+        start = start + (t - cap)
+        t = cap
+    if start.ndim == 0 and write_len is None:
+        if not rolling:
+            return jax.lax.dynamic_update_slice(buf, new, (0, start, 0, 0))
+        idx = jnp.mod(start + jnp.arange(t), cap)
+        return buf.at[:, idx].set(new)
+    if start.ndim == 0:
+        start = jnp.broadcast_to(start, (b,))
+    idx = start[:, None] + jnp.arange(t)[None, :]
+    if rolling:
+        idx = jnp.mod(idx, cap)
+    if write_len is not None:
+        idx = jnp.where(jnp.arange(t)[None, :] < write_len[:, None],
+                        idx, cap + 1)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, t))
+    return buf.at[bidx, idx].set(new, mode="drop")
+
+
+def _attend_cache_plus_block(q, kk, vv, *, cache_cap, cache_len, q_abs,
+                             window, extra_mask, attn_softcap, impl,
+                             kv_chunk, rolling):
+    """Single-softmax attention over [cache(cap) ++ block(T)].
+
+    ``q_abs``: [Tq] or [B,Tq] absolute position of each query token (tree
+    nodes carry depth-based positions). ``cache_len``: scalar or [B]. Cache
+    slot j of a non-rolling cache holds absolute position j; a rolling cache
+    slot j holds the largest t<cache_len with t % cap == j. ``extra_mask``:
+    [Tq,T_blk] or [B,Tq,T_blk] tree/bidir mask for the in-flight block tail
+    (defaults to causal-in-block by block order).
+    """
+    b, tq = q.shape[:2]
+    total = kk.shape[1]
+    t_blk = total - cache_cap
+    clen = jnp.asarray(cache_len)
+    batched = (clen.ndim > 0) or (jnp.asarray(q_abs).ndim > 1) or (
+        extra_mask is not None and extra_mask.ndim > 2)
+    if batched:
+        clen = jnp.broadcast_to(clen.reshape(-1, 1, 1), (b, 1, 1))
+        qpos = jnp.broadcast_to(
+            jnp.asarray(q_abs).reshape(-1, tq)[..., None], (b, tq, 1))
+        jc = jnp.arange(cache_cap)[None, None, :]
+    else:
+        qpos = jnp.asarray(q_abs)[:, None]                  # [Tq,1]
+        jc = jnp.arange(cache_cap)[None, :]
+    if rolling:
+        last = clen - 1
+        abs_kpos = last - jnp.mod(last - jc, cache_cap)
+        cache_ok = (abs_kpos >= 0) & (abs_kpos < clen) & (abs_kpos <= qpos)
+        if window is not None:
+            cache_ok &= abs_kpos > (qpos - window)
+    else:
+        cache_ok = (jc < clen) & (jc <= qpos)
+        if window is not None:
+            cache_ok &= jc > (qpos - window)
+    tgt_shape = (b, tq, cache_cap) if batched else (tq, cache_cap)
+    cache_ok = jnp.broadcast_to(cache_ok, tgt_shape)
+    if extra_mask is not None:
+        blk = extra_mask
+        if batched and blk.ndim == 2:
+            blk = jnp.broadcast_to(blk[None], (b, tq, t_blk))
+    else:
+        blk = jnp.tril(jnp.ones((tq, t_blk), dtype=bool), k=t_blk - tq)
+        if window is not None:
+            ji = jnp.arange(t_blk)[None, :]
+            ii = jnp.arange(tq)[:, None] + (t_blk - tq)
+            blk = blk & (ji > (ii - window))
+        if batched:
+            blk = jnp.broadcast_to(blk[None], (b, tq, t_blk))
+    full_mask = jnp.concatenate([cache_ok, blk], axis=-1)
+    return attend(q, kk, vv, causal=False, q_offset=0, extra_mask=full_mask,
+                  attn_softcap=attn_softcap, impl=impl, kv_chunk=kv_chunk)

@@ -1,0 +1,66 @@
+"""KV cache + drafter feature cache: functional, sharded, fixed-capacity.
+
+Layout: k/v ``[B, S_max, Hkv, Dh]`` per layer group (stacked over scanned
+layers as leading axis ``[L, B, S_max, Hkv, Dh]``); ``length`` is a scalar
+int32 (uniform across batch — the serving engine aligns requests per wave;
+ragged batching is handled above this layer by the engine's slot map).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def init_cache(num_layers: int, batch: int, max_len: int, num_kv_heads: int,
+               head_dim: int, dtype=jnp.bfloat16):
+    shape = (num_layers, batch, max_len, num_kv_heads, head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_layer(cache, idx):
+    """View of one (scanned) layer's cache: k/v [B,S,Hkv,Dh]."""
+    return cache["k"][idx], cache["v"][idx]
+
+
+def update_layer(cache, idx, k_new, v_new, start):
+    """Write [B,T,Hkv,Dh] at positions [start, start+T) of layer ``idx``."""
+    t = k_new.shape[1]
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new[None].astype(cache["k"].dtype),
+        (idx, 0, start, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new[None].astype(cache["v"].dtype),
+        (idx, 0, start, 0, 0))
+    return {**cache, "k": k, "v": v}
+
+
+def set_length(cache, length):
+    return {**cache, "length": jnp.asarray(length, jnp.int32)}
+
+
+def constrain_cache(cache, kv_seq_sharded: bool = False):
+    """Apply sharding: batch over data; seq over model when KV-SP decode."""
+    seq_axis = "kv_seq" if kv_seq_sharded else None
+    out = dict(cache)
+    for key in ("k", "v"):
+        out[key] = constrain(cache[key], (None, "batch", seq_axis, "kv_heads", None))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Drafter feature cache: projected target features consumed as K/V by every
+# drafter layer (DFlash KV injection). Stored post-projection per drafter
+# layer: [L_d, B, S_max, Hkv_d, Dh_d] for K and V.
+# --------------------------------------------------------------------------
+
+def init_feature_cache(num_layers: int, batch: int, max_len: int,
+                       num_kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+    return init_cache(num_layers, batch, max_len, num_kv_heads, head_dim, dtype)

@@ -1,0 +1,87 @@
+"""Primitive layers: norms, dense projections, embeddings, RoPE, softcap."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import param as pm
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm_init(d):
+    return {"scale": pm.ones((d,))}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d):
+    return {"scale": pm.ones((d,)), "bias": pm.zeros((d,))}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------- dense ----
+def dense(w, x, bias=None):
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: [..., T, H, Dh]; positions: [..., T] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                              # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [..., T, Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                    # [..., T, 1, Dh/2]
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- softcap ----
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ----------------------------------------------------------- activation ----
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu, "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+            }[name]
+
+
+# ------------------------------------------------------------ embedding ----
+def embedding_init(key, vocab, d, dtype=jnp.float32):
+    return {"embedding": pm.trunc_normal(key, (vocab, d), dtype, stddev=0.02)}
+
+
+def embed(p, tokens, dtype):
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed(w, x):
+    """lm head: x [..., d] @ w [d, vocab]."""
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))

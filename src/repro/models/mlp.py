@@ -1,0 +1,28 @@
+"""Dense (gated) MLP block: SwiGLU / GeGLU / plain."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import param as pm
+from repro.models.layers import dense, act_fn
+from repro.distributed.sharding import constrain
+
+
+def mlp_init(key, d_model, d_ff, gated=True):
+    ks = pm.split(key, 3)
+    p = {"w_in": pm.dense_init(ks[0], d_model, d_ff),
+         "w_out": pm.dense_init(ks[1], d_ff, d_model, scale=d_ff ** -0.5)}
+    if gated:
+        p["w_gate"] = pm.dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp(p, x, act="silu", gated=True):
+    h = dense(p["w_in"], x)
+    if gated:
+        g = dense(p["w_gate"], x)
+        h = act_fn(act)(g) * h
+    else:
+        h = act_fn(act)(h)
+    h = constrain(h, ("batch", None, "ffn"))
+    return dense(p["w_out"], h)

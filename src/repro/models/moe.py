@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Dispatch paths (same math; allclose-tested against each other):
+
+* ``einsum``     — GShard-style one-hot dispatch (tiny configs, oracle).
+* ``scatter``    — capacity-bucket scatter/gather; expert tensors are laid
+                   out ``[E, C, d]`` and sharded over the ``experts`` logical
+                   axis, so under SPMD the dispatch lowers to all-to-all-like
+                   collectives. Default for production meshes.
+
+Routing: top-k softmax over selected experts (renormalized), capacity
+``C = ceil(T*k/E * capacity_factor)``; overflow tokens drop that expert's
+contribution (standard GShard behaviour). Shared experts (DeepSeek-style)
+bypass routing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import param as pm
+from repro.models.layers import act_fn
+from repro.distributed.sharding import constrain
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    d, dff, e = cfg.d_model, cfg.d_ff, m.num_experts
+    ks = pm.split(key, 5)
+
+    def stack(k2, din, dout, scale=None):
+        kk = pm.split(k2, e)
+        return jnp.stack([pm.dense_init(kk[i], din, dout, scale=scale)
+                          for i in range(e)])
+
+    p = {
+        "router": pm.dense_init(ks[0], d, e, scale=0.02),
+        "moe_w_in": stack(ks[1], d, dff),
+        "moe_w_out": stack(ks[2], dff, d, scale=dff ** -0.5),
+    }
+    if cfg.mlp_gated:
+        p["moe_w_gate"] = stack(ks[3], d, dff)
+    if m.num_shared_experts:
+        from repro.models.mlp import mlp_init
+        p["shared"] = mlp_init(ks[4], d, dff * m.num_shared_experts,
+                               cfg.mlp_gated)
+    return p
+
+
+def _route(p, x2, cfg):
+    """x2: [T, d] -> (gates [T,k], idx [T,k])."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x2.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def _capacity(t, cfg):
+    m = cfg.moe
+    c = int(math.ceil(t * m.top_k / m.num_experts * m.capacity_factor))
+    return max(c, min(8, t))
+
+
+def _expert_ffn(p, xin, cfg):
+    """xin: [E, C, d] -> [E, C, d], batched expert matmuls."""
+    h = jnp.einsum("ecd,edf->ecf", xin, p["moe_w_in"].astype(xin.dtype))
+    if cfg.mlp_gated:
+        g = jnp.einsum("ecd,edf->ecf", xin, p["moe_w_gate"].astype(xin.dtype))
+        h = act_fn(cfg.mlp_act)(g) * h
+    else:
+        h = act_fn(cfg.mlp_act)(h)
+    h = constrain(h, ("experts", None, "expert_ffn"))
+    return jnp.einsum("ecf,efd->ecd", h, p["moe_w_out"].astype(xin.dtype))
+
+
+def moe_apply(p, x, cfg, dispatch: Optional[str] = None):
+    """x: [B,T,d] -> [B,T,d].
+
+    Under an active mesh with an experts axis, the shard_map EP path is used
+    (replicated-token expert parallelism — one activation psum per layer;
+    see distributed/ep.py and §Perf): it replaces both pjit dispatch paths,
+    which gather expert weights under SPMD.
+    """
+    m = cfg.moe
+    dispatch = dispatch or m.dispatch
+    b, t, d = x.shape
+    if dispatch != "einsum":
+        from repro.distributed.ep import ep_available, moe_apply_ep
+        if ep_available(cfg):
+            y = moe_apply_ep(p, x, cfg)
+            if m.num_shared_experts:
+                from repro.models.mlp import mlp
+                y = y + mlp(p["shared"], x, cfg.mlp_act, cfg.mlp_gated
+                            ).astype(y.dtype)
+            return y.astype(x.dtype)
+    x2 = x.reshape(b * t, d)
+    gates, idx = _route(p, x2, cfg)
+    cap = _capacity(b * t, cfg)
+
+    if dispatch == "einsum":
+        y2 = _apply_einsum(p, x2, gates, idx, cap, cfg)
+    elif dispatch in ("scatter", "all_to_all"):
+        y2 = _apply_scatter(p, x2, gates, idx, cap, cfg)
+    else:
+        raise ValueError(dispatch)
+
+    if m.num_shared_experts:
+        from repro.models.mlp import mlp
+        y2 = y2 + mlp(p["shared"], x2[None], cfg.mlp_act,
+                      cfg.mlp_gated)[0].astype(y2.dtype)
+    return y2.reshape(b, t, d).astype(x.dtype)
+
+
+def _positions(idx, e, cap):
+    """Rank of each (token, choice) within its expert's queue. [T,k]."""
+    tk = idx.shape[0] * idx.shape[1]
+    flat = idx.reshape(-1)                               # [T*k], row-major:
+    onehot = jax.nn.one_hot(flat, e, dtype=jnp.int32)    # priority = token order
+    pos = jnp.cumsum(onehot, axis=0) - 1                 # [T*k, E]
+    pos = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    return pos.reshape(idx.shape)                        # [T,k]
+
+
+def _apply_einsum(p, x2, gates, idx, cap, cfg):
+    e = cfg.moe.num_experts
+    t = x2.shape[0]
+    pos = _positions(idx, e, cap)
+    keep = pos < cap
+    # one-hot dispatch/combine tensors [T, E, C]
+    oh_e = jax.nn.one_hot(idx, e, dtype=x2.dtype)          # [T,k,E]
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                          dtype=x2.dtype)                  # [T,k,C] (oob -> 0)
+    disp = jnp.einsum("tke,tkc->tec", oh_e, oh_c)
+    comb = jnp.einsum("tke,tkc,tk->tec", oh_e, oh_c, gates.astype(x2.dtype))
+    xin = jnp.einsum("tec,td->ecd", disp, x2)
+    xout = _expert_ffn(p, xin, cfg)
+    return jnp.einsum("tec,ecd->td", comb, xout)
+
+
+def _apply_scatter(p, x2, gates, idx, cap, cfg):
+    e = cfg.moe.num_experts
+    t, d = x2.shape
+    k = idx.shape[1]
+    pos = _positions(idx, e, cap)
+    keep = (pos < cap).reshape(-1)
+    ef = idx.reshape(-1)
+    pf = jnp.where(keep, pos.reshape(-1), 0)
+    src = jnp.repeat(jnp.arange(t), k)
+    xin = jnp.zeros((e, cap, d), x2.dtype)
+    vals = x2[src] * keep[:, None].astype(x2.dtype)
+    xin = xin.at[ef, pf].add(vals, mode="drop")
+    xin = constrain(xin, ("experts", None, None))
+    xout = _expert_ffn(p, xin, cfg)
+    xout = constrain(xout, ("experts", None, None))
+    picked = xout[ef, pf] * keep[:, None].astype(x2.dtype)  # [T*k, d]
+    w = gates.reshape(-1)[:, None].astype(x2.dtype)
+    y2 = jnp.zeros_like(x2).at[src].add(picked * w)
+    return y2

@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  y = W_out( GeLU(W_gate x) * RGLRU( conv1d( W_branch x ) ) )
+RG-LRU: r_t = sigmoid(W_a u_t + b_a)         (recurrence gate)
+        i_t = sigmoid(W_x u_t + b_x)         (input gate)
+        a_t = exp(c * r_t * log(sigmoid(lam)))  in (0,1),  c = 8
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The diagonal linear recurrence runs as an associative scan (parallel over
+time on TPU); decode carries (h, conv buffer) state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import param as pm
+from repro.models.layers import dense
+
+STATE_KEYS = ("rg_h", "conv_buf")
+_C = 8.0
+
+
+def rglru_block_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = pm.split(key, 6)
+    return {
+        "w_branch": pm.dense_init(ks[0], d, w),
+        "w_gate": pm.dense_init(ks[1], d, w),
+        "w_out": pm.dense_init(ks[2], w, d, scale=w ** -0.5),
+        "conv_w": pm.trunc_normal(ks[3], (cfg.conv1d_width, w), stddev=0.1),
+        "wa": pm.dense_init(ks[4], w, w),
+        "ba": pm.zeros((w,)),
+        "wx": pm.dense_init(ks[5], w, w),
+        "bx": pm.zeros((w,)),
+        # lambda init so that a^c = sigmoid(lam)^c is in ~[0.9, 0.999]
+        "lam": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+    }
+
+
+def rglru_state_init(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "rg_h": jnp.zeros((batch, w), dtype),
+        "conv_buf": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+    }
+
+
+def _causal_conv1d(x, w, buf, snap_at=None):
+    """x: [B,T,W]; w: [K,W] depthwise; buf: [B,K-1,W] left context.
+
+    snap_at: optional [B] — new buffer reflects state after exactly
+    ``snap_at`` tokens (for partial-acceptance commit), else after all T.
+    """
+    k = w.shape[0]
+    t = x.shape[1]
+    xx = jnp.concatenate([buf.astype(x.dtype), x], axis=1)   # [B, K-1+T, W]
+    out = sum(xx[:, i:i + t] * w[i].astype(x.dtype) for i in range(k))
+    if k > 1:
+        if snap_at is None:
+            new_buf = xx[:, -(k - 1):]
+        else:
+            idx = snap_at[:, None] + jnp.arange(k - 1)[None, :]
+            new_buf = jnp.take_along_axis(xx, idx[..., None], axis=1)
+    else:
+        new_buf = buf
+    return out, new_buf
+
+
+def rglru_block(p, x, cfg, state: Optional[Dict] = None, snap_at=None):
+    """x: [B,T,d] -> (y [B,T,d], new_state).
+
+    snap_at: optional [B] in [1, T] — returned state corresponds to having
+    consumed exactly snap_at tokens (outputs still cover all T).
+    """
+    b, t, d = x.shape
+    w_dim = cfg.rglru_width or d
+    st = state or rglru_state_init(cfg, b)
+    gate = jax.nn.gelu(dense(p["w_gate"], x))
+    u = dense(p["w_branch"], x)
+    u, conv_buf = _causal_conv1d(u, p["conv_w"], st["conv_buf"],
+                                 snap_at=snap_at)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(p["wa"], uf) + p["ba"])
+    i = jax.nn.sigmoid(dense(p["wx"], uf) + p["bx"])
+    log_a1 = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))   # [W]
+    log_a = _C * r * log_a1[None, None, :]                      # [B,T,W]
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * uf)
+
+    # h_t = a_t h_{t-1} + b_t with h_{-1} = state: fold state into b_0
+    b0 = gated_in[:, 0] + a[:, 0] * st["rg_h"].astype(jnp.float32)
+    bs = jnp.concatenate([b0[:, None], gated_in[:, 1:]], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, bs), axis=1)
+    y = dense(p["w_out"], (gate.astype(jnp.float32) * h).astype(x.dtype))
+    if snap_at is None:
+        h_fin = h[:, -1]
+    else:
+        h_fin = jnp.take_along_axis(
+            h, jnp.clip(snap_at - 1, 0, t - 1)[:, None, None], axis=1)[:, 0]
+    new_state = {"rg_h": h_fin,
+                 "conv_buf": conv_buf.astype(st["conv_buf"].dtype)}
+    return y, new_state

@@ -1,0 +1,189 @@
+"""Sharded optimizers: AdamW, AdamW with int8-quantized moments (state
+compression — a distributed-optimization trick that cuts optimizer HBM 4x),
+and Adafactor (factored second moment, for the 1T-param MoE).
+
+All are functional: ``init(params) -> state``, ``update(grads, state, params,
+step, hp) -> (new_params, new_state)``. Optimizer states inherit the
+parameter sharding (same tree paths -> same logical axes), so ZeRO-style
+sharding falls out of the parameter rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import OptimizerConfig
+
+
+# ------------------------------------------------------------- schedules ---
+def lr_schedule(hp: OptimizerConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(hp.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - hp.warmup_steps)
+                    / jnp.maximum(hp.total_steps - hp.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return hp.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# ------------------------------------------------------- int8 moment util --
+_Q8_BLOCK = 256
+
+
+def _q8(x):
+    """Symmetric BLOCK-WISE int8 quantization (bitsandbytes-style): the
+    second moment spans many orders of magnitude within a tensor, so scales
+    are per 256-element block, not per tensor."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _Q8_BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, _Q8_BLOCK)
+    amax = jnp.max(jnp.abs(fp), axis=1, keepdims=True) + 1e-12
+    scale = (amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dq8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+# ------------------------------------------------------------------ AdamW --
+def adamw_init(params, quantized: bool = False):
+    def zero_like(p):
+        if quantized:
+            nblk = (p.size + _Q8_BLOCK - 1) // _Q8_BLOCK
+            return {"q": jnp.zeros((nblk, _Q8_BLOCK), jnp.int8),
+                    "s": jnp.zeros((nblk,), jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {"m": jax.tree.map(zero_like, params),
+            "v": jax.tree.map(zero_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, hp: OptimizerConfig,
+                 quantized: bool = False):
+    step = state["step"] + 1
+    lr = lr_schedule(hp, step)
+    grads, gn = clip_by_global_norm(grads, hp.grad_clip)
+    b1, b2, eps = hp.b1, hp.b2, hp.eps
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    is_leaf = (lambda x: isinstance(x, dict) and "q" in x) if quantized else None
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        if quantized:
+            m_f = _dq8(m["q"], m["s"], p.shape)
+            # v stored in sqrt domain (halves the dynamic range an int8
+            # linear code must span — cf. bitsandbytes' dynamic map)
+            v_f = jnp.square(_dq8(v["q"], v["s"], p.shape))
+        else:
+            m_f, v_f = m, v
+        m_new = b1 * m_f + (1 - b1) * g
+        v_new = b2 * v_f + (1 - b2) * jnp.square(g)
+        upd_ = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        if quantized:
+            # quantization can zero tiny v entries whose m survived; bound
+            # the per-entry step like bitsandbytes' max_unorm
+            upd_ = jnp.clip(upd_, -3.0, 3.0)
+        p_new = (p.astype(jnp.float32)
+                 - lr * (upd_ + hp.weight_decay * p.astype(jnp.float32)))
+        if quantized:
+            mq, ms = _q8(m_new)
+            vq, vs = _q8(jnp.sqrt(v_new))
+            return p_new.astype(p.dtype), {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p = jax.tree.leaves(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_leaf)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_leaf)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    treedef = jax.tree.structure(params)
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gn}
+
+
+# -------------------------------------------------------------- Adafactor --
+def adafactor_init(params):
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(factored, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, hp: OptimizerConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(hp, step)
+    grads, gn = clip_by_global_norm(grads, hp.grad_clip)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+    eps = 1e-30
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if p.ndim >= 2:
+            vr = decay * v["vr"] + (1 - decay) * g2.mean(-1)
+            vc = decay * v["vc"] + (1 - decay) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            vv = decay * v["v"] + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(vv, eps))
+            v_new = {"v": vv}
+        # update clipping (Adafactor d=1.0)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms_u)
+        p_new = (p.astype(jnp.float32)
+                 - lr * (u + hp.weight_decay * p.astype(jnp.float32)))
+        return p_new.astype(p.dtype), v_new
+
+    leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=leaf)
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_p, {"v": new_v, "step": step}, {"lr": lr, "grad_norm": gn}
+
+
+# ------------------------------------------------------------- dispatcher --
+def make_optimizer(hp: OptimizerConfig):
+    if hp.name == "adamw":
+        return (lambda p: adamw_init(p, False),
+                lambda g, s, p: adamw_update(g, s, p, hp, False))
+    if hp.name == "adamw8bit":
+        return (lambda p: adamw_init(p, True),
+                lambda g, s, p: adamw_update(g, s, p, hp, True))
+    if hp.name == "adafactor":
+        return (adafactor_init, lambda g, s, p: adafactor_update(g, s, p, hp))
+    raise ValueError(hp.name)

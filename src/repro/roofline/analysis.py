@@ -1,0 +1,119 @@
+"""Roofline terms (assignment §ROOFLINE ANALYSIS).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_chip
+    memory term     = HBM_bytes_per_device / HBM_bw_chip
+    collective term = collective_bytes_per_device / link_bw
+
+FLOPs + collective bytes come from the loop-aware HLO analyzer (per-device,
+exact for scanned stacks — XLA's cost_analysis undercounts loop bodies and
+is recorded as an auxiliary raw value only).
+
+HBM bytes use an analytic traffic model (documented below) because HLO text
+can't see inside fusions: weights touched once per step + optimizer traffic +
+activation/KV traffic. The model errs on the LOW side for the pure-XLA
+reference attention (which spills score tiles); the Pallas kernels remove
+that spill on TPU, making the analytic number the deployable one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.config.base import ModelConfig, ShapeSpec
+
+# TPU v5e per chip
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def model_flops(cfg: ModelConfig, tokens: int, train: bool) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); 2*N*D for inference."""
+    n = cfg.active_param_count()
+    mult = 6.0 if train else 2.0
+    return mult * n * tokens
+
+
+@dataclasses.dataclass
+class Terms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops: float
+    hlo_flops_global: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return (self.model_flops / self.hlo_flops_global
+                if self.hlo_flops_global else 0.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-model-FLOP time / roofline-limited step time: how close the
+        step is to the compute roofline on its dominant resource."""
+        t = max(self.compute_s, self.memory_s, self.collective_s)
+        useful = self.model_flops / (PEAK_FLOPS * self.chips)
+        return useful / t if t else 0.0
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape: ShapeSpec, kind: str,
+                       chips: int, param_bytes_per_dev: float,
+                       state_bytes_per_dev: float = 0.0,
+                       opt_bytes_per_dev: float = 0.0,
+                       spec_overhead: float = 1.0) -> float:
+    """Per-device HBM traffic model for one step.
+
+    train:   read params (fwd) + read (bwd) + write grads + read+write opt
+             + activation traffic (remat: ~2 fwd + 1 bwd passes of layer IO)
+    prefill: read params + write KV + activation IO
+    decode:  read params + read KV cache (the decisive term) + tree IO
+    """
+    d = cfg.d_model
+    l = cfg.num_layers
+    act_bpe = 2.0                                 # bf16 activations
+    if kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / max(chips, 1)
+        act_io = 12 * l * tokens_dev * d * act_bpe    # fwd+remat+bwd layer IO
+        return (4 * param_bytes_per_dev + 3 * opt_bytes_per_dev + act_io)
+    if kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / max(chips, 1)
+        kv_write = state_bytes_per_dev
+        act_io = 8 * l * tokens_dev * d * act_bpe
+        return param_bytes_per_dev + kv_write + act_io
+    # decode: one spec-decoding cycle
+    return (param_bytes_per_dev * spec_overhead + state_bytes_per_dev)
+
+
+def derive_terms(cfg: ModelConfig, shape: ShapeSpec, kind: str, chips: int,
+                 hlo: Dict[str, float], hbm_bytes_per_dev: float,
+                 tokens_for_model_flops: float) -> Terms:
+    flops_dev = hlo.get("flops", 0.0)
+    coll_dev = hlo.get("coll_bytes", 0.0)
+    mf = model_flops(cfg, int(tokens_for_model_flops), kind == "train")
+    return Terms(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=hbm_bytes_per_dev / HBM_BW,
+        collective_s=coll_dev / LINK_BW,
+        flops_per_dev=flops_dev,
+        hbm_bytes_per_dev=hbm_bytes_per_dev,
+        coll_bytes_per_dev=coll_dev,
+        model_flops=mf,
+        hlo_flops_global=flops_dev * chips,
+        chips=chips,
+    )

@@ -1,0 +1,117 @@
+"""Roofline report generator: reads experiments/dryrun/*.json and renders
+the EXPERIMENTS.md tables (§Dry-run + §Roofline)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+ARCHS = ("qwen2.5-3b", "internlm2-20b", "gemma2-2b", "stablelm-3b",
+         "recurrentgemma-2b", "kimi-k2-1t-a32b", "grok-1-314b",
+         "llama-3.2-vision-11b", "whisper-medium", "rwkv6-1.6b")
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> Dict:
+    out = {}
+    for arch in ARCHS:
+        for shape in SHAPES:
+            name = f"{arch}_{shape}_{mesh}" + (f"_{tag}" if tag else "")
+            p = DRYRUN_DIR / f"{name}.json"
+            if p.exists():
+                out[(arch, shape)] = json.loads(p.read_text())
+    return out
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(mesh: str = "single", tag: str = "") -> str:
+    cells = load_cells(mesh, tag)
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful (6ND/HLO) | roofline frac | HBM GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            c = cells.get((arch, shape))
+            if c is None:
+                lines.append(f"| {arch} | {shape} | (missing) | | | | | | |")
+                continue
+            if c.get("skipped"):
+                lines.append(f"| {arch} | {shape} | skipped "
+                             f"(quadratic attn @500k) | | | | | | |")
+                continue
+            if not c.get("ok"):
+                lines.append(f"| {arch} | {shape} | FAILED | | | | | | |")
+                continue
+            t = c["terms"]
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_s(t['compute_s'])} | "
+                f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+                f"**{t['dominant']}** | {t['useful_ratio']:.2f} | "
+                f"{t['roofline_fraction']:.3f} | "
+                f"{c['memory']['peak_estimate_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh: str) -> str:
+    cells = load_cells(mesh)
+    n_ok = sum(1 for c in cells.values() if c.get("ok"))
+    n_skip = sum(1 for c in cells.values() if c.get("skipped"))
+    lines = [
+        f"mesh={mesh}: {n_ok}/{len(cells)} cells ok "
+        f"({n_skip} skipped by design)",
+        "",
+        "| arch | shape | kind | compile_s | args GB/dev | temp GB/dev | "
+        "HLO GF/dev | coll MB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), c in sorted(cells.items()):
+        if c.get("skipped"):
+            lines.append(f"| {arch} | {shape} | skip | - | - | - | - | - |")
+            continue
+        if not c.get("ok"):
+            lines.append(f"| {arch} | {shape} | FAIL | - | - | - | - | - |")
+            continue
+        m = c["memory"]
+        lines.append(
+            f"| {arch} | {shape} | {c['kind']} | {c.get('compile_s', 0)} | "
+            f"{m['argument_bytes_per_dev'] / 2**30:.2f} | "
+            f"{m['temp_bytes_per_dev'] / 2**30:.2f} | "
+            f"{c['hlo']['flops'] / 1e9:.0f} | "
+            f"{c['hlo']['coll_bytes'] / 2**20:.0f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(mesh: str = "single") -> List:
+    """worst roofline fraction / most collective-bound / most
+    paper-representative (a decode cell of a GQA dense arch)."""
+    cells = {k: v for k, v in load_cells(mesh).items()
+             if v.get("ok") and not v.get("skipped")}
+    worst = min(cells, key=lambda k: cells[k]["terms"]["roofline_fraction"])
+    coll = max(cells, key=lambda k: (cells[k]["terms"]["collective_s"]
+                                     / max(max(cells[k]["terms"]["compute_s"],
+                                               cells[k]["terms"]["memory_s"]),
+                                           1e-12)))
+    paper = ("qwen2.5-3b", "decode_32k")
+    return [worst, coll, paper]
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multi"):
+        print(f"\n===== dryrun {mesh} =====")
+        print(dryrun_table(mesh))
+    print("\n===== roofline (single pod) =====")
+    print(roofline_table("single"))
+    print("\nhillclimb picks:", pick_hillclimb_cells())

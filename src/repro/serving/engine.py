@@ -1,0 +1,85 @@
+"""Batched D2SD serving engine.
+
+Wave-based continuous batching: requests queue up, waves of ``batch_size``
+uniform-prompt-length requests run the speculative decode loop together
+(per-example ragged lengths inside a wave are native — the engine state
+carries per-request cache lengths). Tracks per-request and aggregate
+acceptance/latency statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import pipeline as pl
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [P]
+    max_new: int
+    out: Optional[np.ndarray] = None
+    n_cycles: int = 0
+    latency_s: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, bundle: pl.SpecBundle, batch_size: int = 8,
+                 seed: int = 0):
+        self.bundle = bundle
+        self.batch_size = batch_size
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self.stats = {"tokens": 0, "cycles": 0, "accepted": 0,
+                      "wall_s": 0.0, "waves": 0}
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        uid = len(self.queue) + len(self.done)
+        self.queue.append(Request(uid, np.asarray(prompt, np.int32),
+                                  max_new))
+        return uid
+
+    def _next_wave(self) -> List[Request]:
+        if not self.queue:
+            return []
+        # group by prompt length (uniform-length waves)
+        self.queue.sort(key=lambda r: len(r.prompt))
+        plen = len(self.queue[0].prompt)
+        wave = [r for r in self.queue if len(r.prompt) == plen]
+        wave = wave[: self.batch_size]
+        for r in wave:
+            self.queue.remove(r)
+        return wave
+
+    def run(self) -> Dict:
+        while self.queue:
+            wave = self._next_wave()
+            prompts = np.stack([r.prompt for r in wave])
+            max_new = max(r.max_new for r in wave)
+            self.key, sub = jax.random.split(self.key)
+            t0 = time.time()
+            out = pl.generate(self.bundle, prompts, max_new=max_new,
+                              key=sub, collect_stats=False)
+            dt = time.time() - t0
+            for i, r in enumerate(wave):
+                r.out = out["tokens"][i, : r.max_new]
+                r.n_cycles = out["n_cycles"]
+                r.latency_s = dt
+                self.done.append(r)
+            n_tok = sum(min(r.max_new, out["tokens"].shape[1])
+                        for r in wave)
+            self.stats["tokens"] += n_tok
+            self.stats["cycles"] += out["n_cycles"] * len(wave)
+            self.stats["wall_s"] += dt
+            self.stats["waves"] += 1
+            self.stats["alpha"] = out["alpha"]
+        s = dict(self.stats)
+        s["tokens_per_s"] = (s["tokens"] / s["wall_s"]
+                             if s["wall_s"] else 0.0)
+        return s

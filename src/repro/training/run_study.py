@@ -1,0 +1,119 @@
+"""One-shot empirical study driver: pretrain target, distill all drafters,
+save artifacts for the benchmark suite.
+
+    PYTHONPATH=src python -m repro.training.run_study [--fast]
+
+Artifacts land in experiments/study/ (checkpoints + metadata); benchmarks
+load them instead of retraining.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.paper_target import drafter_small, smoke
+from repro.core.drafter import DrafterConfig
+from repro.data.synthetic import SyntheticDataset, TASKS
+from repro.training import distill
+
+STUDY_DIR = Path(__file__).resolve().parents[3] / "experiments" / "study"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--target-steps", type=int, default=240)
+    ap.add_argument("--drafter-steps", type=int, default=400)
+    ap.add_argument("--gamma", type=int, default=16)
+    ap.add_argument("--rollouts-per-task", type=int, default=48)
+    ap.add_argument("--rollout-new", type=int, default=160)
+    args = ap.parse_args()
+    if args.fast:
+        args.target_steps, args.drafter_steps = 60, 80
+        args.rollouts_per_task, args.rollout_new = 8, 48
+
+    STUDY_DIR.mkdir(parents=True, exist_ok=True)
+    tcfg = smoke()
+    t_all = time.time()
+
+    # 1. pretrain target ----------------------------------------------------
+    print("== pretraining target ==")
+    tparams, tmetrics = distill.pretrain_target(
+        tcfg, steps=args.target_steps, batch=24, seq_len=160)
+    print(f"target final loss {tmetrics[-1]['loss']:.4f}")
+
+    # 2. rollouts ------------------------------------------------------------
+    print("== generating target rollouts ==")
+    rolls = []
+    for task in TASKS:
+        ds = SyntheticDataset(task, 1, 64, seed=123)
+        prompts = ds.prompts(args.rollouts_per_task, 32)
+        r = distill.generate_rollouts(tparams, tcfg, prompts,
+                                      args.rollout_new)
+        rolls.append(r)
+    rollouts = np.concatenate(rolls, axis=0)
+    print(f"rollouts: {rollouts.shape}")
+
+    # 3. drafters ------------------------------------------------------------
+    dcfg = drafter_small(gamma=args.gamma)
+    print("== training DFlash drafter (first draft) ==")
+    d1, l1 = distill.train_drafter(dcfg, tparams, tcfg, rollouts, vp=False,
+                                   steps=args.drafter_steps, batch=24)
+    print("== training VP-Drafter (Eq. 6/7 recipe) ==")
+    d2, l2 = distill.train_drafter(dcfg, tparams, tcfg, rollouts, vp=True,
+                                   steps=args.drafter_steps, batch=24)
+    print("== training EAGLE-style AR baseline drafter ==")
+    dcfg_ar = drafter_small(gamma=args.gamma, causal=True)
+    dar, l3 = distill.train_drafter(dcfg_ar, tparams, tcfg, rollouts,
+                                    vp=False, causal=True,
+                                    steps=args.drafter_steps, batch=24)
+
+    # 4. save ---------------------------------------------------------------
+    ck = Checkpointer(str(STUDY_DIR / "ckpt"))
+    ck.save(1, {"target": tparams, "d1": d1, "d2": d2, "ar": dar},
+            extra={"gamma": args.gamma,
+                   "target_loss": float(tmetrics[-1]["loss"]),
+                   "drafter_losses": {"dflash": l1[-1], "vp": l2[-1],
+                                      "ar": l3[-1]}})
+    meta = {"gamma": args.gamma, "target_steps": args.target_steps,
+            "drafter_steps": args.drafter_steps,
+            "rollouts": list(rollouts.shape),
+            "wall_min": round((time.time() - t_all) / 60, 1)}
+    (STUDY_DIR / "meta.json").write_text(json.dumps(meta, indent=2))
+    print(f"saved study artifacts to {STUDY_DIR} "
+          f"({meta['wall_min']} min)")
+
+
+def load_study():
+    """Load (tcfg, dcfg, params dict, meta) saved by main()."""
+    tcfg = smoke()
+    meta = json.loads((STUDY_DIR / "meta.json").read_text())
+    gamma = meta["gamma"]
+    dcfg = drafter_small(gamma=gamma)
+    dcfg_ar = drafter_small(gamma=gamma, causal=True)
+    ck = Checkpointer(str(STUDY_DIR / "ckpt"))
+    import jax.numpy as jnp
+    from repro.core.drafter import drafter_init
+    from repro.models import lm
+    like = {
+        "target": jax.eval_shape(lambda: lm.lm_init(jax.random.PRNGKey(0),
+                                                    tcfg)),
+        "d1": jax.eval_shape(lambda: drafter_init(jax.random.PRNGKey(0),
+                                                  dcfg)),
+        "d2": jax.eval_shape(lambda: drafter_init(jax.random.PRNGKey(0),
+                                                  dcfg)),
+        "ar": jax.eval_shape(lambda: drafter_init(jax.random.PRNGKey(0),
+                                                  dcfg_ar)),
+    }
+    params, extra = ck.restore(like)
+    return tcfg, dcfg, dcfg_ar, params, meta
+
+
+if __name__ == "__main__":
+    main()

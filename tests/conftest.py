@@ -1,0 +1,61 @@
+import os
+import sys
+
+# Tests run on 1 CPU device (the dry-run sets its own XLA_FLAGS in a
+# subprocess). Keep compilation light.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config.base import ModelConfig
+from repro.core.drafter import DrafterConfig, drafter_init
+from repro.models import lm
+
+
+def tiny_target(vocab=61, dtype="bfloat16", **kw):
+    base = dict(num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+                d_ff=128, vocab_size=vocab, max_seq_len=256, remat=False,
+                dtype=dtype)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_drafter(vocab=61, target_d=64, gamma=6, dtype="bfloat16",
+                 target_cfg=None, **kw):
+    if target_cfg is not None:
+        fd = lm.feature_dim(target_cfg)
+    else:
+        fd = 3 * target_d
+    base = dict(d_model=32, num_layers=2, num_heads=2, num_kv_heads=2,
+                d_ff=64, vocab_size=vocab, target_feature_dim=fd,
+                gamma=gamma, dtype=dtype)
+    base.update(kw)
+    return DrafterConfig(**base)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pure_greedy(tp, tcfg, prompts, n):
+    """Reference: cached greedy decoding, one token at a time."""
+    b, p = prompts.shape
+    states = lm.init_states(tcfg, b, p + n + 4,
+                            dtype=jnp.dtype(tcfg.dtype))
+    out = lm.forward(tp, prompts, tcfg, states=states, write_kv=True,
+                     remat=False)
+    states = out["states"]
+    tok = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)
+    res = [tok]
+    for _ in range(n - 1):
+        out = lm.forward(tp, tok[:, None], tcfg, states=states, write_kv=True,
+                         attend_cache_on_write=True, remat=False)
+        states = out["states"]
+        tok = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)
+        res.append(tok)
+    return jnp.stack(res, 1)

@@ -1,0 +1,36 @@
+"""Beyond-paper adaptive-K scheduler: unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adaptive
+from repro.core.confidence import boundary_posterior
+
+
+def test_concentrated_posterior_needs_one_branch():
+    r = jnp.array([[0.9, 0.01, 0.01, 0.01, 0.01]])
+    assert int(adaptive.posterior_coverage_k(r, 0.85, 4)[0]) == 1
+
+
+def test_diffuse_posterior_needs_many():
+    r = jnp.ones((1, 8)) / 8
+    assert int(adaptive.posterior_coverage_k(r, 0.85, 4)[0]) == 4
+
+
+def test_skip_when_confident():
+    conf = jnp.array([[0.99] * 6, [0.5] * 6])
+    k = adaptive.choose_k(conf, boundary_posterior(conf))
+    assert int(k[0]) == 0 and int(k[1]) > 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0.05, 0.99), min_size=3, max_size=12),
+       st.floats(0.5, 0.95))
+def test_choose_k_bounds_and_monotone_coverage(confs, cov):
+    conf = jnp.array([confs])
+    r = boundary_posterior(conf)
+    k = adaptive.posterior_coverage_k(r, cov, 4)
+    assert 1 <= int(k[0]) <= 4
+    k_hi = adaptive.posterior_coverage_k(r, min(cov + 0.04, 0.99), 4)
+    assert int(k_hi[0]) >= int(k[0])       # more coverage -> never fewer

@@ -1,0 +1,59 @@
+"""Unit + property tests for the rejection-boundary estimator (Eqs. 3-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import confidence as C
+
+
+def test_confidence_is_max_prob():
+    logits = jnp.array([[[0.0, 2.0, 1.0], [3.0, 0.0, 0.0]]])
+    c = C.confidences(logits)
+    p = jax.nn.softmax(logits, -1).max(-1)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(p), rtol=1e-6)
+
+
+def test_confidence_of_chosen_token():
+    logits = jnp.array([[[0.0, 2.0, 1.0]]])
+    tok = jnp.array([[2]])
+    c = C.confidences(logits, tok)
+    p = jax.nn.softmax(logits, -1)[0, 0, 2]
+    np.testing.assert_allclose(float(c[0, 0]), float(p), rtol=1e-6)
+
+
+def test_boundary_posterior_example():
+    # Eq. 4 hand check: conf = [.9, .5]:
+    # r(0) = (1-.9) = .1 ; r(1) = .9*(1-.5) = .45
+    conf = jnp.array([[0.9, 0.5]])
+    r = C.boundary_posterior(conf)
+    np.testing.assert_allclose(np.asarray(r[0]), [0.1, 0.45], rtol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0.01, 0.99), min_size=2, max_size=12))
+def test_posterior_is_subdistribution(confs):
+    """sum_i r(i) = 1 - prod(c) (leftover = all-accepted event)."""
+    conf = jnp.array([confs])
+    r = np.asarray(C.boundary_posterior(conf))[0]
+    assert (r >= -1e-6).all()
+    total = r.sum()
+    expect = 1.0 - np.prod(confs)
+    np.testing.assert_allclose(total, expect, rtol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 4))
+def test_topk_selects_highest(g, k):
+    key = jax.random.PRNGKey(g * 13 + k)
+    conf = jax.random.uniform(key, (2, g), minval=0.05, maxval=0.95)
+    r = C.boundary_posterior(conf)
+    k = min(k, g)
+    scores, idx = C.topk_prefixes(r, k)
+    rn = np.asarray(r)
+    for b in range(2):
+        top = np.sort(rn[b])[::-1][:k]
+        np.testing.assert_allclose(np.sort(np.asarray(scores[b]))[::-1], top,
+                                   rtol=1e-6)
+        assert len(set(np.asarray(idx[b]).tolist())) == k  # distinct forks

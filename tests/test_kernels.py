@@ -1,0 +1,149 @@
+"""Per-kernel interpret-mode validation against the ref.py oracles,
+sweeping shapes / dtypes / GQA groups / masks (assignment item c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import flash_attention as fa
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+CASES = [
+    # (B, Hq, Hkv, Tq, Tkv, D, causal, window, softcap, dtype)
+    (1, 2, 2, 128, 128, 64, True, None, None, jnp.float32),
+    (2, 4, 2, 128, 256, 64, True, None, None, jnp.bfloat16),
+    (1, 8, 2, 256, 256, 128, True, None, 50.0, jnp.bfloat16),
+    (2, 2, 1, 128, 384, 64, True, 100, None, jnp.float32),
+    (1, 4, 4, 64, 512, 64, False, None, None, jnp.float32),
+    (2, 4, 2, 100, 300, 64, True, None, None, jnp.float32),  # ragged pads
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_forward_matches_ref(case):
+    b, hq, hkv, tq, tkv, d, causal, window, cap, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2 ** 31), 3)
+    q = _rand(ks[0], (b, hq, tq, d), dtype)
+    k = _rand(ks[1], (b, hkv, tkv, d), dtype)
+    v = _rand(ks[2], (b, hkv, tkv, d), dtype)
+    q_off = tkv - tq
+    kv_len = tkv - 7
+    o, lse = fa.flash_attention_fwd(
+        q, k, v, causal=causal, q_offset=q_off, window=window, kv_len=kv_len,
+        attn_softcap=cap, interpret=True)
+    o_ref, lse_ref = ref.flash_attention_ref(
+        q, k, v, causal=causal, q_offset=q_off, window=window, kv_len=kv_len,
+        attn_softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("case", [
+    (1, 2, 2, 128, 128, 64, True, None, None, jnp.float32),
+    (2, 4, 2, 128, 256, 64, True, None, None, jnp.float32),
+    (1, 4, 2, 128, 128, 64, True, None, 30.0, jnp.float32),
+    (1, 2, 1, 128, 256, 64, True, 64, None, jnp.float32),
+])
+def test_flash_backward_matches_autodiff(case):
+    b, hq, hkv, tq, tkv, d, causal, window, cap, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2 ** 31), 3)
+    q = _rand(ks[0], (b, hq, tq, d), dtype)
+    k = _rand(ks[1], (b, hkv, tkv, d), dtype)
+    v = _rand(ks[2], (b, hkv, tkv, d), dtype)
+    q_off = tkv - tq
+
+    def f_kernel(q, k, v):
+        o = ops.flash_attention(q, k, v, causal=causal, q_offset=q_off,
+                                window=window, attn_softcap=cap,
+                                interpret=True, layout="BHTD")
+        return (o.astype(jnp.float32) ** 2).sum()
+
+    def f_ref(q, k, v):
+        o, _ = ref.flash_attention_ref(q, k, v, causal=causal,
+                                       q_offset=q_off, window=window,
+                                       attn_softcap=cap)
+        return (o.astype(jnp.float32) ** 2).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+CASC_CASES = [
+    # (B, Hq, Hkv, Tq, S, Tb, D, window, cap, rolling, dtype)
+    (1, 2, 2, 16, 512, 16, 64, None, None, False, jnp.float32),
+    (2, 4, 2, 76, 1024, 76, 64, None, None, False, jnp.bfloat16),
+    (1, 8, 2, 32, 2048, 32, 128, None, 50.0, False, jnp.bfloat16),
+    (2, 2, 1, 16, 512, 16, 64, 300, None, True, jnp.float32),
+    (1, 4, 4, 8, 768, 8, 64, None, None, False, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", CASC_CASES)
+def test_cascade_matches_ref(case):
+    b, hq, hkv, tq, s, tb, d, window, cap, rolling, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2 ** 31), 6)
+    q = _rand(ks[0], (b, hq, tq, d), dtype)
+    ck = _rand(ks[1], (b, hkv, s, d), dtype)
+    cv = _rand(ks[2], (b, hkv, s, d), dtype)
+    bk = _rand(ks[3], (b, hkv, tb, d), dtype)
+    bv = _rand(ks[4], (b, hkv, tb, d), dtype)
+    cache_len = jnp.array([s - 5] + [s - 200] * (b - 1))[:b]
+    # comb-ish positions: anchor + increasing depths
+    q_abs = cache_len[:, None] + jnp.arange(tq)[None, :] % max(tb, 1)
+    tree_mask = jnp.tril(jnp.ones((tq, tb), bool))  # chain-ish mask
+    o = casc_call = None
+    from repro.kernels.ops import cascade_attention
+    o = cascade_attention(q, ck, cv, bk, bv, cache_len=cache_len,
+                          q_abs=q_abs, tree_mask=tree_mask, window=window,
+                          attn_softcap=cap, rolling=rolling, n_splits=4,
+                          bk=256, interpret=True, layout="BHTD")
+    o_ref = ref.cascade_attention_ref(
+        q, ck, cv, bk, bv, cache_len=cache_len, q_abs=q_abs,
+        tree_mask=tree_mask, window=window, attn_softcap=cap,
+        rolling=rolling)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_cascade_equals_engine_reference():
+    """Cascade kernel == the engine's _attend_cache_plus_block on the same
+    inputs (ties the kernel to the system that uses it)."""
+    from repro.models.blocks import _attend_cache_plus_block
+    b, hq, hkv, tq, s, d = 2, 4, 2, 12, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = _rand(ks[0], (b, tq, hq, d), jnp.float32)
+    ck = _rand(ks[1], (b, s, hkv, d), jnp.float32)
+    cv = _rand(ks[2], (b, s, hkv, d), jnp.float32)
+    bk = _rand(ks[3], (b, tq, hkv, d), jnp.float32)
+    bv = _rand(ks[4], (b, tq, hkv, d), jnp.float32)
+    cache_len = jnp.array([s - 3, s - 100])
+    q_abs = cache_len[:, None] + jnp.arange(tq)[None, :]
+    tree_mask = jnp.tril(jnp.ones((tq, tq), bool))
+
+    o1 = ops.cascade_attention(q, ck, cv, bk, bv, cache_len=cache_len,
+                               q_abs=q_abs, tree_mask=tree_mask,
+                               interpret=True, n_splits=2, bk=128)
+    kk = jnp.concatenate([ck, bk], axis=1)
+    vv = jnp.concatenate([cv, bv], axis=1)
+    o2 = _attend_cache_plus_block(
+        q, kk, vv, cache_cap=s, cache_len=cache_len, q_abs=q_abs,
+        window=None, extra_mask=tree_mask, attn_softcap=None, impl="dense",
+        kv_chunk=128, rolling=False)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,115 @@
+"""THE paper-level invariants:
+
+1. Greedy D2SD (every mode) emits exactly the pure-greedy target rollout,
+   even with useless random drafters (longest-correct-prefix rule).
+2. Sampled D2SD emits tokens distributed exactly as the target's softmax
+   (multi-branch rejection sampling is lossless).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import ModelConfig, SpecConfig
+from repro.core import pipeline as pl
+from repro.core.drafter import DrafterConfig, drafter_init
+from repro.models import lm
+
+from conftest import tiny_target, tiny_drafter, pure_greedy
+
+GAMMA = 6
+
+
+def _setup(tcfg, gamma=GAMMA, causal=False):
+    dcfg = tiny_drafter(vocab=tcfg.vocab_size, target_d=tcfg.d_model,
+                        gamma=gamma, dtype=tcfg.dtype, causal=causal,
+                        target_cfg=tcfg)
+    tp = lm.lm_init(jax.random.PRNGKey(0), tcfg)
+    d1 = drafter_init(jax.random.PRNGKey(1), dcfg)
+    d2 = drafter_init(jax.random.PRNGKey(2), dcfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (3, 8), 0,
+                                 tcfg.vocab_size)
+    return dcfg, tp, d1, d2, prompts
+
+
+@pytest.mark.parametrize("mode,third", [
+    ("d2sd", False), ("dflash", False), ("naive_k", False),
+    ("eagle", False), ("d2sd", True), ("dflash_second", False)])
+def test_greedy_exact_attention_target(mode, third):
+    # fp32: the equality is exact in exact arithmetic; in bf16 the reference
+    # single-token decode path rounds differently from the batched verify
+    # pass, so random-weight near-ties can flip argmax (engine-internal
+    # consistency still holds via KV gather-commit).
+    tcfg = tiny_target(dtype="float32")
+    dcfg, tp, d1, d2, prompts = _setup(tcfg, causal=(mode == "eagle"))
+    ref = np.asarray(pure_greedy(tp, tcfg, prompts, 16))
+    spec = SpecConfig(gamma=GAMMA, top_k_branches=2, mode=mode,
+                      temperature=0.0, third_level=third)
+    bundle = pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1,
+                           d1 if mode == "dflash_second" else d2)
+    out = pl.generate(bundle, prompts, max_new=16, key=jax.random.PRNGKey(7))
+    assert np.array_equal(out["tokens"], ref), mode
+
+
+@pytest.mark.parametrize("pat,extra,nl", [
+    (("rwkv",), dict(rwkv_head_dim=16), 4),
+    (("recurrent", "recurrent", "local"), dict(sliding_window=8), 5),
+])
+def test_greedy_exact_ssm_target(pat, extra, nl):
+    # fp32: the SSM replay-commit recomputes states, exact only up to float
+    # associativity in bf16 (DESIGN §5.1); fp32 removes the ambiguity.
+    tcfg = tiny_target(dtype="float32", layer_pattern=pat, num_layers=nl,
+                       **extra)
+    dcfg, tp, d1, d2, prompts = _setup(tcfg)
+    assert not pl.uses_tree_attention(tcfg)
+    ref = np.asarray(pure_greedy(tp, tcfg, prompts, 14))
+    spec = SpecConfig(gamma=GAMMA, top_k_branches=2, mode="d2sd",
+                      temperature=0.0)
+    bundle = pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
+    out = pl.generate(bundle, prompts, max_new=14, key=jax.random.PRNGKey(7))
+    assert np.array_equal(out["tokens"], ref)
+
+
+def test_rolling_cache_wraps_correctly():
+    """Local-attn target with window << generated length."""
+    tcfg = tiny_target(dtype="float32",
+                       layer_pattern=("local", "global"), sliding_window=8)
+    dcfg, tp, d1, d2, prompts = _setup(tcfg)
+    ref = np.asarray(pure_greedy(tp, tcfg, prompts, 24))
+    spec = SpecConfig(gamma=GAMMA, top_k_branches=2, mode="d2sd",
+                      temperature=0.0)
+    bundle = pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
+    out = pl.generate(bundle, prompts, max_new=24, key=jax.random.PRNGKey(7))
+    assert np.array_equal(out["tokens"], ref)
+
+
+def test_sampling_is_lossless_distribution():
+    V = 13
+    tcfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                       d_ff=64, vocab_size=V, max_seq_len=64, remat=False,
+                       dtype="float32")
+    dcfg = DrafterConfig(d_model=16, num_layers=1, num_heads=2,
+                         num_kv_heads=2, d_ff=32, vocab_size=V,
+                         target_feature_dim=2 * 32, gamma=4, dtype="float32")
+    tp = lm.lm_init(jax.random.PRNGKey(0), tcfg)
+    d1 = drafter_init(jax.random.PRNGKey(1), dcfg)
+    d2 = drafter_init(jax.random.PRNGKey(2), dcfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (1, 6), 0, V)
+    spec = SpecConfig(gamma=4, top_k_branches=2, mode="d2sd", temperature=1.0)
+    bundle = pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
+    est = pl.engine_init(bundle, 1, 32)
+    est = pl.prefill(bundle, est, prompts)
+    full = jnp.concatenate([prompts, est["anchor"][:, None]], 1)
+    logits = lm.forward(tp, full, tcfg,
+                        remat=False)["logits"][:, -1].astype(jnp.float32)
+    p_ref = np.asarray(jax.nn.softmax(logits, -1)[0])
+
+    cyc = jax.jit(lambda e, k: pl.decode_cycle(bundle, e, k, False))
+    n = 1500
+    counts = np.zeros(V)
+    for i in range(n):
+        _, out = cyc(est, jax.random.PRNGKey(1000 + i))
+        counts[int(np.asarray(out["tokens"][0, 0]))] += 1
+    tv = 0.5 * np.abs(counts / n - p_ref).sum()
+    noise = float(np.sqrt(V / (4 * n)))
+    assert tv < max(0.06, 2.5 * noise), (tv, noise)

@@ -1,0 +1,165 @@
+"""Substrate tests: optimizers, checkpoint/restart (incl. elastic restore +
+failure injection + exact resume), data determinism, straggler monitor."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.config.base import ModelConfig, OptimizerConfig, TrainConfig
+from repro.data.synthetic import SyntheticDataset, TASKS, decode_ids
+from repro.models import lm
+from repro.optim import optimizers as opt_lib
+from repro.training.trainer import InjectedFailure, train
+
+
+def _tiny():
+    return ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                       d_ff=64, vocab_size=512, max_seq_len=64, remat=False)
+
+
+# ---------------------------------------------------------------- optim ----
+@pytest.mark.parametrize("name", ["adamw", "adamw8bit", "adafactor"])
+def test_optimizers_reduce_loss(name):
+    cfg = _tiny()
+    hp = OptimizerConfig(name=name, lr=5e-3, total_steps=30, warmup_steps=2)
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    opt_init, opt_update = opt_lib.make_optimizer(hp)
+    opt_state = opt_init(params)
+    ds = SyntheticDataset("math", 8, 32, seed=0)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, batch, cfg))(params)
+        p2, o2, _ = opt_update(g, opt_state, params)
+        return p2, o2, loss
+
+    losses = []
+    for _ in range(30):
+        b = ds.next_batch()
+        params, opt_state, loss = step(params, opt_state, b)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses[::10]
+
+
+def test_int8_moments_match_fp32_closely():
+    cfg = _tiny()
+    hp = OptimizerConfig(name="adamw", lr=1e-3, total_steps=10)
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    s_f = opt_lib.adamw_init(params, quantized=False)
+    s_q = opt_lib.adamw_init(params, quantized=True)
+    p_f, s_f, _ = opt_lib.adamw_update(g, s_f, params, hp, quantized=False)
+    p_q, s_q, _ = opt_lib.adamw_update(g, s_q, params, hp, quantized=True)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_q)))
+    assert d < 1e-4, d
+
+
+# ----------------------------------------------------------------- data ----
+def test_data_deterministic_and_resumable():
+    a = SyntheticDataset("math", 4, 32, seed=3)
+    b = SyntheticDataset("math", 4, 32, seed=3)
+    for _ in range(3):
+        a.next_batch()
+    state = a.state_dict()
+    ba = a.next_batch()
+    for _ in range(3):
+        b.next_batch()
+    b2 = SyntheticDataset("math", 4, 32, seed=999)
+    b2.load_state_dict(state)
+    bb = b2.next_batch()
+    np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+
+
+def test_data_sharding_disjoint():
+    s0 = SyntheticDataset("code", 4, 32, seed=1, shard_id=0, num_shards=2)
+    s1 = SyntheticDataset("code", 4, 32, seed=1, shard_id=1, num_shards=2)
+    t0 = s0.next_batch()["tokens"]
+    t1 = s1.next_batch()["tokens"]
+    assert not np.array_equal(t0, t1)
+
+
+def test_tasks_look_right():
+    ds = SyntheticDataset("math", 1, 48, seed=0)
+    s = decode_ids(ds.next_batch()["tokens"][0][1:])
+    assert "=" in s and "+" in s, s
+
+
+# ----------------------------------------------------- checkpoint/fault ----
+def test_checkpoint_roundtrip_and_integrity(tmp_path):
+    cfg = _tiny()
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, {"params": params}, extra={"step": 5})
+    restored, extra = ck.restore({"params": params})
+    assert extra["step"] == 5
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # corrupt -> detected
+    shard = next((tmp_path / "step_00000005").glob("*.npz"))
+    raw = bytearray(shard.read_bytes())
+    raw[100] ^= 0xFF
+    shard.write_bytes(bytes(raw))
+    with pytest.raises(AssertionError, match="corrupted"):
+        ck.restore({"params": params})
+
+
+def test_failure_injection_and_exact_resume(tmp_path):
+    """A run with an injected mid-training failure must produce EXACTLY the
+    same final params as an uninterrupted run (checkpoint + data-state
+    resume)."""
+    cfg = _tiny()
+    hp = OptimizerConfig(lr=1e-3, total_steps=12, warmup_steps=2)
+
+    def make_step():
+        opt_init, opt_update = opt_lib.make_optimizer(hp)
+
+        @jax.jit
+        def step(params, opt_state, batch):
+            loss, g = jax.value_and_grad(
+                lambda p: lm.loss_fn(p, batch, cfg))(params)
+            p2, o2, m = opt_update(g, opt_state, params)
+            return p2, o2, {"loss": loss, **m}
+
+        return step, opt_init
+
+    def run(inject: bool, ckdir):
+        tc = TrainConfig(batch_size=4, seq_len=32,
+                         optimizer=hp, checkpoint_every=4,
+                         checkpoint_dir=ckdir, log_every=1000)
+        step, opt_init = make_step()
+        params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+        ds = SyntheticDataset("math", 4, 32, seed=0)
+        state = {"params": params, "opt_state": opt_init(params), "step": 0}
+        fired = {"done": False}
+
+        def pre(step_i):
+            if inject and step_i == 6 and not fired["done"]:
+                fired["done"] = True
+                raise InjectedFailure("simulated node loss")
+
+        out = train(step, state, ds, tc, hooks={"pre_step": pre},
+                    log=lambda *a: None)
+        return out
+
+    o1 = run(False, str(tmp_path / "a"))
+    o2 = run(True, str(tmp_path / "b"))
+    assert o2["restarts"] == 1
+    for a, b in zip(jax.tree.leaves(o1["state"]["params"]),
+                    jax.tree.leaves(o2["state"]["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_monitor_flags_outliers():
+    from repro.training.trainer import StragglerMonitor
+    m = StragglerMonitor(threshold=3.0)
+    for i in range(20):
+        m.record(i, 0.1)
+    assert m.record(20, 0.9)
+    assert m.flagged == [20]

@@ -1,0 +1,121 @@
+"""Property tests for the prefix-tree machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree as T
+
+
+def make_comb(g, k, seed=0, b=2):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    anchor = jax.random.randint(ks[0], (b,), 0, 50)
+    trunk = jax.random.randint(ks[1], (b, g - 1), 0, 50)
+    branch = jax.random.randint(ks[2], (b, k, g - 1), 0, 50)
+    # distinct fork indices per example
+    fork = jnp.stack([jax.random.permutation(
+        jax.random.fold_in(ks[3], i), g - 1)[:k] for i in range(b)])
+    return T.comb_tree(anchor, trunk, branch, fork, g), fork
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 10), st.integers(1, 4))
+def test_comb_structure(g, k):
+    k = min(k, g - 1)
+    tree, fork = make_comb(g, k, seed=g * 7 + k)
+    parent = np.asarray(tree.parent)
+    depth = np.asarray(tree.depth)
+    valid = np.asarray(tree.valid)
+    for b in range(parent.shape[0]):
+        for n in range(tree.n):
+            if not valid[b, n]:
+                continue
+            if n == 0:
+                assert parent[b, n] == -1 and depth[b, n] == 0
+            else:
+                p = parent[b, n]
+                assert valid[b, p], (b, n, p)
+                assert depth[b, n] == depth[b, p] + 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 8), st.integers(1, 3))
+def test_ancestor_mask_closure(g, k):
+    k = min(k, g - 1)
+    tree, _ = make_comb(g, k, seed=g * 11 + k)
+    m = np.asarray(T.ancestor_mask(tree))
+    parent = np.asarray(tree.parent)
+    valid = np.asarray(tree.valid)
+    for b in range(m.shape[0]):
+        for u in range(tree.n):
+            assert m[b, u, u]
+            if not valid[b, u]:
+                continue
+            p = parent[b, u]
+            if p >= 0:
+                # mask of u = mask of parent + self
+                expect = m[b, p].copy()
+                expect[u] = True
+                assert (m[b, u] == expect).all()
+
+
+def test_chain_tree_mask_is_causal():
+    anchor = jnp.array([3, 4])
+    toks = jnp.arange(10).reshape(2, 5)
+    tree = T.chain_tree(anchor, toks)
+    m = np.asarray(T.attention_mask(tree))
+    tri = np.tril(np.ones((6, 6), bool))
+    assert (m[0] == tri).all() and (m[1] == tri).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 8), st.integers(1, 3), st.integers(0, 10 ** 6))
+def test_propagate_and_best_path(g, k, seed):
+    k = min(k, g - 1)
+    tree, _ = make_comb(g, k, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    ok = jax.random.bernoulli(key, 0.6, (tree.b, tree.n))
+    acc = np.asarray(T.propagate_acceptance(tree, ok))
+    okn = np.asarray(ok)
+    parent = np.asarray(tree.parent)
+    valid = np.asarray(tree.valid)
+    for b in range(tree.b):
+        for n in range(tree.n):
+            # brute-force ancestor check
+            cur, good = n, True
+            while cur != 0:
+                if not okn[b, cur]:
+                    good = False
+                    break
+                cur = parent[b, cur]
+            assert acc[b, n] == good or n == 0
+
+    best, n_acc, path = T.best_path(tree, jnp.asarray(acc))
+    bestn, n_accn, pathn = map(np.asarray, (best, n_acc, path))
+    depth = np.asarray(tree.depth)
+    for b in range(tree.b):
+        # n_acc is the max accepted depth
+        cand = [depth[b, n] for n in range(tree.n)
+                if acc[b, n] and valid[b, n]] + [0]
+        assert n_accn[b] == max(cand)
+        # path walks root -> best along parents
+        assert pathn[b, 0] == 0
+        for d in range(1, n_accn[b] + 1):
+            assert parent[b, pathn[b, d]] == pathn[b, d - 1]
+        assert depth[b, pathn[b, n_accn[b]]] == n_accn[b]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 8), st.integers(2, 3))
+def test_children_table(g, k):
+    tree, _ = make_comb(g, k, seed=g + 100 * k)
+    tbl = np.asarray(T.children_table(tree, max_children=k + 1))
+    parent = np.asarray(tree.parent)
+    valid = np.asarray(tree.valid)
+    for b in range(tree.b):
+        for n in range(tree.n):
+            kids = [c for c in tbl[b, n] if c >= 0]
+            expect = [m for m in range(tree.n)
+                      if valid[b, m] and parent[b, m] == n]
+            assert kids == expect[: k + 1]
