@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.config.base import SpecConfig
 from repro.core import pipeline as pl
+from repro.core import strategies
 from repro.data.synthetic import SyntheticDataset, TASKS
 from repro.training.run_study import load_study
 
@@ -86,16 +87,20 @@ def build_bundle(method: str, gamma: int = None, k: int = 4,
                          params["target"], d1, d2)
 
 
-def n_draft_passes(method: str, gamma: int) -> int:
-    return {"dflash": 1, "naive_k": 1, "d2sd": 2, "dflash_second": 2,
-            "d2sd_l3": 3, "eagle": gamma - 1}[method]
+def _method_spec(method: str, gamma: int, k: int) -> SpecConfig:
+    mode = "d2sd" if method == "d2sd_l3" else method
+    return SpecConfig(gamma=gamma, top_k_branches=k, mode=mode,
+                      third_level=(method == "d2sd_l3"))
+
+
+def n_draft_passes(method: str, gamma: int, k: int = 4) -> int:
+    spec = _method_spec(method, gamma, k)
+    return strategies.get_strategy(spec.mode).n_draft_passes(spec)
 
 
 def tree_size(method: str, gamma: int, k: int) -> int:
-    if method in ("dflash", "eagle"):
-        return gamma
-    base = gamma + k * (gamma - 1)
-    return base + k * (gamma - 1) if method == "d2sd_l3" else base
+    spec = _method_spec(method, gamma, k)
+    return strategies.get_strategy(spec.mode).n_tree_nodes(spec)
 
 
 def measure(method: str, task: str, *, n_prompts: int = 12,

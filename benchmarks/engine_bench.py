@@ -1,0 +1,78 @@
+"""Engine micro-benchmark: host-loop ``generate`` vs on-device
+``generate_ondevice`` tokens/s.
+
+Needs no trained study artifacts — builds a tiny random bundle, so it can
+run in any environment (it measures loop/dispatch overhead, not model
+quality). The on-device path removes the per-cycle host sync + numpy
+copy-out; on small CPU models that overhead dominates, which is exactly
+what this section quantifies.
+
+    PYTHONPATH=src python -m benchmarks.run --only engine [--quick]
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.config.base import ModelConfig, SpecConfig
+from repro.core import pipeline as pl
+from repro.core.drafter import DrafterConfig, drafter_init
+from repro.models import lm
+
+
+def _tiny_bundle(gamma: int, k: int, vocab: int = 199) -> pl.SpecBundle:
+    tcfg = ModelConfig(num_layers=4, d_model=128, num_heads=4,
+                       num_kv_heads=2, d_ff=256, vocab_size=vocab,
+                       max_seq_len=1024, remat=False, dtype="float32")
+    dcfg = DrafterConfig(d_model=64, num_layers=2, num_heads=2,
+                         num_kv_heads=2, d_ff=128, vocab_size=vocab,
+                         target_feature_dim=lm.feature_dim(tcfg),
+                         gamma=gamma, dtype="float32")
+    tp = lm.lm_init(jax.random.PRNGKey(0), tcfg)
+    d1 = drafter_init(jax.random.PRNGKey(1), dcfg)
+    d2 = drafter_init(jax.random.PRNGKey(2), dcfg)
+    spec = SpecConfig(gamma=gamma, top_k_branches=k, mode="d2sd")
+    return pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
+
+
+def _time(fn, repeats: int) -> float:
+    fn()                                     # warmup / compile
+    t0 = time.time()
+    for _ in range(repeats):
+        fn()
+    return (time.time() - t0) / repeats
+
+
+def run(quick: bool = False) -> None:
+    gamma, k = (6, 2) if quick else (8, 3)
+    batch, max_new = (2, 24) if quick else (4, 48)
+    repeats = 2 if quick else 3
+    bundle = _tiny_bundle(gamma, k)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (batch, 12), 3,
+                                 bundle.target_cfg.vocab_size)
+    key = jax.random.PRNGKey(7)
+
+    host_s = _time(lambda: pl.generate(bundle, prompts, max_new=max_new,
+                                       key=key, collect_stats=False),
+                   repeats)
+    dev_s = _time(lambda: np.asarray(
+        pl.generate_ondevice(bundle, prompts, max_new=max_new,
+                             key=key)["tokens"]), repeats)
+    n_tok = batch * max_new
+    print(csv_row("generate_host_loop", host_s * 1e6,
+                  f"tokens_per_s={n_tok / host_s:.1f}"))
+    print(csv_row("generate_ondevice", dev_s * 1e6,
+                  f"tokens_per_s={n_tok / dev_s:.1f}"))
+    print(csv_row("ondevice_speedup", 0.0,
+                  f"x{host_s / dev_s:.2f} host/ondevice wall ratio"))
+
+
+if __name__ == "__main__":
+    run("--quick" in sys.argv)

@@ -26,8 +26,9 @@ def main() -> None:
                     help="only run benches that need no trained artifacts")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench
-    sections = [("kernels", lambda q: kernel_bench.run(q))]
+    from benchmarks import engine_bench, kernel_bench
+    sections = [("kernels", lambda q: kernel_bench.run(q)),
+                ("engine", lambda q: engine_bench.run(q))]
 
     study_dir = Path(__file__).resolve().parents[1] / "experiments" / "study"
     if not args.skip_study:

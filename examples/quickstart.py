@@ -46,6 +46,12 @@ def main():
           f"{out['alpha']:.2f}")
     print("tokens[0]:", out["tokens"][0])
 
+    # same decode, but the whole loop fused on device (lax.while_loop):
+    dev = pl.generate_ondevice(bundle, prompts, max_new=24,
+                               key=jax.random.PRNGKey(7))
+    assert np.array_equal(out["tokens"], np.asarray(dev["tokens"]))
+    print("on-device while_loop path: token-identical to host loop")
+
     # lossless check vs plain greedy decoding
     states = lm.init_states(tcfg, 2, 64)
     o = lm.forward(tp, prompts, tcfg, states=states, write_kv=True,

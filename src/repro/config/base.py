@@ -183,6 +183,13 @@ class ModelConfig:
         return int(self.param_count() - self.num_layers * inactive)
 
 
+# Built-in draft strategies (repro.core.strategies registry). Plugin
+# strategies registered at runtime extend this set — validation checks the
+# live registry when it is loaded.
+KNOWN_STRATEGIES: Tuple[str, ...] = (
+    "d2sd", "dflash", "naive_k", "dflash_second", "eagle")
+
+
 @dataclasses.dataclass(frozen=True)
 class SpecConfig:
     """D2SD speculative decoding configuration (paper §3)."""
@@ -191,8 +198,9 @@ class SpecConfig:
     # Drafter conditioning: how many trailing target layers' features feed
     # the FC projection (paper: multi-layer concat).
     feature_layers: int = 3
-    # Ablation / mode switches (paper Tables 5/6/7):
-    mode: str = "d2sd"              # d2sd | dflash | naive_k | dflash_second | eagle
+    # Draft strategy name, dispatched through the repro.core.strategies
+    # registry (paper ablations Tables 5/6/7 are the built-in entries).
+    mode: str = "d2sd"              # see KNOWN_STRATEGIES + runtime plugins
     third_level: bool = False       # Table 7: stack one more VP level (top-1 each)
     temperature: float = 0.0        # 0 => greedy verification, else lossless sampling
     # VP-Drafter training recipe (Eqs. 6-7)
@@ -200,6 +208,32 @@ class SpecConfig:
     loss_tau: float = 4.0           # anchor-decay temperature in Eq. 7
     # Engine details
     max_target_len: int = 4096
+
+    def __post_init__(self):
+        names = KNOWN_STRATEGIES
+        if self.mode not in names:
+            # Consult the live registry (runtime-registered plugins, future
+            # built-ins); imported lazily so config-only users do not pay
+            # the core import on the common path.
+            try:
+                from repro.core import strategies as _strategies
+                names = tuple(_strategies.registered_strategies())
+            except ImportError:
+                pass
+        if self.mode not in names:
+            raise ValueError(
+                f"SpecConfig.mode={self.mode!r} is not a registered draft "
+                f"strategy; known: {sorted(names)}")
+        if self.gamma < 2:
+            raise ValueError(
+                "gamma must cover anchor + >=1 drafted token")
+        if self.top_k_branches < 1:
+            raise ValueError("top_k_branches must be >= 1")
+
+    @property
+    def strategy(self) -> str:
+        """Registry name of the draft strategy (alias of ``mode``)."""
+        return self.mode
 
 
 @dataclasses.dataclass(frozen=True)

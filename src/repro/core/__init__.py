@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public decode-engine API (post strategy/backend redesign):
+#   pipeline    — SpecBundle, decode_cycle, generate, generate_ondevice
+#   state       — EngineState, engine_init, prefill
+#   strategies  — DraftStrategy protocol + registry (register_strategy)
+#   verify      — VerifierBackend protocol + select_backend, acceptance rules
+#   tree        — candidate prefix trees for joint verification

@@ -1,37 +1,45 @@
-"""D2SD end-to-end decoding engine (paper §3.3).
+"""D2SD decode engine: strategy/backend composition + generation loops.
 
-One cycle = first draft (DFlash) -> top-K unmask -> second draft (VP,
-batched) -> joint tree verification (cascade attention for attention
-targets; branch-batched state-replay for SSM/hybrid targets, DESIGN §5.1)
--> longest-accepted-prefix commit.
+Architecture (post API-redesign)
+--------------------------------
+One decode cycle is the composition of three pluggable pieces over a typed
+:class:`~repro.core.state.EngineState` pytree:
 
-Modes (SpecConfig.mode):
-  d2sd          full pipeline (K VP branches)
-  dflash        single-chain baseline (Table 1 / rows "DFlash")
-  naive_k       trunk + K T=1 resamples from the SAME d1 forward (Table 5)
-  dflash_second d2sd pipeline but drafter-1 weights as second drafter
-                (Table 6 — wire bundle.d2_params = d1 params)
-  eagle         autoregressive chain drafter baseline (EAGLE-style)
-plus SpecConfig.third_level (Table 7) stacking one more VP level.
+1. **DraftStrategy** (``core/strategies.py``) — registry-dispatched on
+   ``SpecConfig.mode``; turns ``(bundle, state, key)`` into a candidate
+   :class:`~repro.core.tree.Tree` plus per-node proposal distributions.
+   The paper modes (d2sd / dflash / naive_k / dflash_second / eagle,
+   §3.3 + Tables 5-7) are the built-in registrations; a new drafter
+   variant registers a class and needs no engine change.
+2. **VerifierBackend** (``core/verify.py``) — selected from target
+   ``ModelConfig`` capabilities: cascade tree-attention verify for
+   pure-attention targets, branch-batched state-replay verify for
+   SSM/hybrid targets (DESIGN §5.1).
+3. **Commit** — :func:`decode_cycle` itself only wires draft -> verify ->
+   feature-cache extension and emits the accepted tokens.
 
-The K second-draft branches run in ONE drafter forward by concatenating
-branches along the sequence axis with a block-diagonal bidirectional mask —
-the batched pass of paper step (iii) without duplicating the feature cache.
+Generation loops: :func:`generate` is the legacy host loop (numpy sync per
+cycle, per-example ragged copy-out, calibration stats);
+:func:`generate_ondevice` runs the *entire* loop inside a single
+``jax.lax.while_loop`` with a padded on-device output buffer — no host
+round-trip per cycle — and is the serving fast path. Both produce
+token-identical output for the same keys.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+import functools
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig, SpecConfig
-from repro.core import confidence as conf_lib
-from repro.core import drafter as dr
-from repro.core import tree as tree_lib
+from repro.core import strategies as strat_lib
 from repro.core import verify as verify_lib
-from repro.models import lm
+from repro.core.state import EngineState, engine_init, prefill  # noqa: F401
+from repro.core.verify import uses_tree_attention  # noqa: F401 (back-compat)
+from repro.core import drafter as dr
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,221 +61,37 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def uses_tree_attention(cfg: ModelConfig) -> bool:
-    """Tree-masked verification requires a pure-attention target."""
-    kinds = set(cfg.pattern_for_depth())
-    return not (kinds & {"recurrent", "rwkv"})
-
-
-# ------------------------------------------------------------------ state --
-def engine_init(bundle: SpecBundle, batch: int, max_len: int,
-                ctx_len: int = 0):
-    """Allocate caches for a request wave."""
-    tcfg = bundle.target_cfg
-    dt = jnp.dtype(tcfg.dtype)
-    return {
-        "target": lm.init_states(tcfg, batch, max_len, ctx_len=ctx_len,
-                                 dtype=dt),
-        "d1_feat": dr.init_feat_cache(bundle.d1_cfg, batch, max_len,
-                                      dtype=jnp.dtype(bundle.d1_cfg.dtype)),
-        "d2_feat": dr.init_feat_cache(bundle.d2_cfg, batch, max_len,
-                                      dtype=jnp.dtype(bundle.d2_cfg.dtype)),
-        "anchor": jnp.zeros((batch,), jnp.int32),
-    }
-
-
-def prefill(bundle: SpecBundle, est, prompts, key=None, ctx=None,
-            temperature: float = 0.0):
-    """Process prompts [B, P]; sets anchor = first generated token.
-
-    cache_len is passed as a SCALAR 0: prefill always starts at offset 0, so
-    the KV write lowers to dynamic-update-slice (partitionable along the
-    kv_seq axis with zero communication) instead of a gather-scatter
-    (§Perf: this was 2x9.6GB/layer of all-gather on 32k prefill).
-    """
-    out = lm.forward(bundle.target_params, prompts, bundle.target_cfg,
-                     states=est["target"], cache_len=jnp.zeros((), jnp.int32),
-                     write_kv=True, ctx=ctx, want_features=True, remat=False)
-    b, p = prompts.shape
-    positions = jnp.broadcast_to(jnp.arange(p)[None], (b, p))
-    est = dict(est)
-    est["target"] = out["states"]
-    est["d1_feat"] = dr.extend_feat_cache(
-        bundle.d1_params, bundle.d1_cfg, est["d1_feat"], out["features"],
-        positions, jnp.full((b,), p))
-    est["d2_feat"] = dr.extend_feat_cache(
-        bundle.d2_params, bundle.d2_cfg, est["d2_feat"], out["features"],
-        positions, jnp.full((b,), p))
-    last = out["logits"][:, -1].astype(jnp.float32)
-    if temperature > 0:
-        est["anchor"] = jax.random.categorical(key, last / temperature)
-    else:
-        est["anchor"] = jnp.argmax(last, axis=-1).astype(jnp.int32)
-    return est
-
-
-# ------------------------------------------------------------- drafting ----
-def _first_draft(bundle, est, key, temperature):
-    """DFlash pass: returns (trunk [B,g-1], d1_logits [B,g,V])."""
-    g = bundle.spec.gamma
-    blk = dr.dflash_block(est["anchor"], g, bundle.d1_cfg.mask_token)
-    logits = dr.drafter_forward(bundle.d1_params, bundle.d1_cfg, blk,
-                                est["d1_feat"])
-    if temperature > 0:
-        trunk = jax.random.categorical(
-            key, logits[:, 1:].astype(jnp.float32) / temperature)
-    else:
-        trunk = jnp.argmax(logits[:, 1:], axis=-1)
-    return trunk.astype(jnp.int32), logits
-
-
-def _second_draft(params, dcfg, est_feat, anchor, trunk, fork_idx, key,
-                  temperature, feat_len):
-    """VP pass, K branches in one forward via sequence-axis concatenation.
-
-    Returns (branch_tokens [B,K,g-1], d2_logits [B,K,g,V]).
-    """
-    b, k = fork_idx.shape
-    g = trunk.shape[-1] + 1
-    vp_in = dr.vp_blocks(anchor, trunk, fork_idx, dcfg.mask_token)  # [B,K,g]
-    flat = vp_in.reshape(b, k * g)
-    # block-diagonal bidirectional mask (branches blind to each other)
-    eye = jnp.eye(k, dtype=bool)
-    bmask = jnp.repeat(jnp.repeat(eye, g, 0), g, 1)                 # [Kg,Kg]
-    slots = jnp.tile(jnp.arange(g), k)[None, :]                     # [1,Kg]
-    positions = feat_len[:, None] + slots
-    logits = dr.drafter_forward(params, dcfg, flat, est_feat,
-                                positions=positions, block_mask=bmask)
-    logits = logits.reshape(b, k, g, -1)
-    if temperature > 0:
-        toks = jax.random.categorical(
-            key, logits[:, :, 1:].astype(jnp.float32) / temperature)
-    else:
-        toks = jnp.argmax(logits[:, :, 1:], axis=-1)
-    return toks.astype(jnp.int32), logits
-
-
 # -------------------------------------------------------------- the cycle --
-def decode_cycle(bundle: SpecBundle, est, key, collect_stats: bool = True):
+def decode_cycle(bundle: SpecBundle, state: EngineState, key,
+                 collect_stats: bool = True):
     """One full speculative decoding cycle.
 
-    Returns (est', out) with out = dict(tokens [B, gamma], n_out [B],
+    Returns (state', out) with out = dict(tokens [B, D+1], n_out [B],
     n_acc [B], plus calibration stats when collect_stats).
     """
-    spec = bundle.spec
-    tcfg = bundle.target_cfg
-    g, kbr = spec.gamma, spec.top_k_branches
-    temp = spec.temperature
-    b = est["anchor"].shape[0]
-    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
-    mode = spec.mode
+    strategy = strat_lib.get_strategy(bundle.spec.mode)
+    backend = verify_lib.select_backend(bundle.target_cfg)
+    k_draft, k_verify = jax.random.split(key)
 
-    d2_logits = None
-    fork_idx = None
-    branch_tokens = None
-    d3_info = None
-
-    if mode == "eagle":
-        trunk, d1_draft_logits = dr.ar_chain_draft(
-            bundle.d1_params, bundle.d1_cfg, est["anchor"], est["d1_feat"],
-            steps=g - 1, temperature=temp, key=k1)
-        tree = tree_lib.chain_tree(est["anchor"], trunk)
-        d1_logits = None
-        conf = None
-    else:
-        trunk, d1_logits = _first_draft(bundle, est, k1, temp)
-        conf = conf_lib.confidences(
-            d1_logits[:, 1:],
-            trunk if temp > 0 else None)                       # [B, g-1]
-        if mode == "dflash":
-            tree = tree_lib.chain_tree(est["anchor"], trunk)
-        elif mode == "naive_k":
-            # K extra branches = T=1 multinomial resamples of the same pass
-            resampled = jax.random.categorical(
-                k2, d1_logits[:, None, 1:, :].astype(jnp.float32)
-                / max(temp, 1.0), shape=(b, kbr, g - 1))
-            fork_idx = jnp.zeros((b, kbr), jnp.int32)
-            branch_tokens = resampled.astype(jnp.int32)
-            tree = tree_lib.comb_tree(est["anchor"], trunk, branch_tokens,
-                                      fork_idx, g)
-        else:  # d2sd / dflash_second
-            r = conf_lib.boundary_posterior(conf)
-            _, fork_idx = conf_lib.topk_prefixes(r, kbr)       # [B, K]
-            branch_tokens, d2_logits = _second_draft(
-                bundle.d2_params, bundle.d2_cfg, est["d2_feat"],
-                est["anchor"], trunk, fork_idx, k3, temp,
-                est["d2_feat"]["length"])
-            tree = tree_lib.comb_tree(est["anchor"], trunk, branch_tokens,
-                                      fork_idx, g)
-            if spec.third_level:
-                conf2 = conf_lib.confidences(
-                    d2_logits[:, :, 1:].reshape(b * kbr, g - 1, -1),
-                    branch_tokens.reshape(b * kbr, g - 1) if temp > 0
-                    else None).reshape(b, kbr, g - 1)
-                # only suffix slots (> fork) are third-level candidates
-                slot = jnp.arange(1, g)[None, None, :]
-                c2 = jnp.where(slot > fork_idx[:, :, None] + 1, conf2, 1.0)
-                r2 = conf_lib.boundary_posterior(
-                    c2.reshape(b * kbr, g - 1)).reshape(b, kbr, g - 1)
-                # r2[..., i] = P(prefix of length i accepted); fork slot = i
-                fork3 = jnp.argmax(r2, axis=-1).astype(jnp.int32)
-                fork3 = jnp.clip(jnp.maximum(fork3, fork_idx + 1), 0, g - 2)
-                # visible prefix for third branches = trunk up to fork_b +
-                # branch b tokens up to fork3_b
-                third_tokens, _ = _second_draft(
-                    bundle.d2_params, bundle.d2_cfg, est["d2_feat"],
-                    est["anchor"], _splice(trunk, branch_tokens, fork_idx),
-                    fork3, k4, temp, est["d2_feat"]["length"])
-                tree = tree_lib.extend_third_level(
-                    tree, third_tokens, fork_idx, fork3, g)
-
-    # ---------------- joint verification ----------------
-    tmask = tree_lib.attention_mask(tree)
-    length = est["target"]["length"]
-    positions = tree_lib.positions(tree, length)
-    if uses_tree_attention(tcfg):
-        vout = lm.forward(bundle.target_params, tree.tokens, tcfg,
-                          states=est["target"], write_kv=False,
-                          extra_mask=tmask, positions=positions,
-                          want_features=True, remat=False)
-        logits = vout["logits"].astype(jnp.float32)
-        logits = jnp.where(tree.valid[:, :, None], logits, -1e9)
-        if temp > 0:
-            if mode == "eagle":
-                q = jax.nn.softmax(
-                    d1_draft_logits.astype(jnp.float32) / temp, axis=-1)
-                dprobs = jnp.concatenate([q[:, :1] * 0, q], axis=1)
-            else:
-                dprobs = _draft_probs(tree, d1_logits, d2_logits, fork_idx,
-                                      g, temp, mode)
-            res = verify_lib.sampling_verify(
-                tree, logits, dprobs, k5,
-                max_children=_max_children(mode, kbr, spec.third_level),
-                temperature=temp)
-        else:
-            res = verify_lib.greedy_verify(tree, logits)
-        # commit KV by gathering the accepted path from the verify pass
-        n_commit = res["n_acc"] + 1
-        new_target = lm.commit_kv(est["target"], vout["kv_outs"], tcfg,
-                                  res["path"], n_commit)
-        path_feats = jnp.take_along_axis(
-            vout["features"], res["path"][..., None], axis=1)
-    else:
-        res, new_target, path_feats = _branch_batch_verify(
-            bundle, est, tree, temp, k5)
-        n_commit = res["n_acc"] + 1
+    draft = strategy.draft(bundle, state, k_draft)
+    vo = backend.verify(bundle, state, draft.tree, draft.dprobs,
+                        draft.max_children, k_verify)
+    res = vo.res
+    tree = draft.tree
 
     # ---------------- feature-cache extension ----------------
-    fpos = length[:, None] + jnp.arange(res["path"].shape[1])[None, :]
-    est2 = dict(est)
-    est2["target"] = new_target
-    est2["d1_feat"] = dr.extend_feat_cache(
-        bundle.d1_params, bundle.d1_cfg, est["d1_feat"], path_feats, fpos,
-        n_commit)
-    est2["d2_feat"] = dr.extend_feat_cache(
-        bundle.d2_params, bundle.d2_cfg, est["d2_feat"], path_feats, fpos,
-        n_commit)
-    est2["anchor"] = res["bonus"].astype(jnp.int32)
+    n_commit = res["n_acc"] + 1
+    fpos = (state.length[:, None]
+            + jnp.arange(res["path"].shape[1])[None, :])
+    state2 = state.replace(
+        target=vo.target,
+        d1_feat=dr.extend_feat_cache(
+            bundle.d1_params, bundle.d1_cfg, state.d1_feat, vo.path_feats,
+            fpos, n_commit),
+        d2_feat=dr.extend_feat_cache(
+            bundle.d2_params, bundle.d2_cfg, state.d2_feat, vo.path_feats,
+            fpos, n_commit),
+        anchor=res["bonus"].astype(jnp.int32))
 
     # ---------------- outputs ----------------
     path_tokens = jnp.take_along_axis(tree.tokens, res["path"], axis=1)
@@ -279,170 +103,30 @@ def decode_cycle(bundle: SpecBundle, est, key, collect_stats: bool = True):
                         res["bonus"][:, None], out_tok)
     out = {"tokens": out_tok, "n_out": res["n_acc"] + 1,
            "n_acc": res["n_acc"]}
-    if collect_stats and conf is not None:
+    if collect_stats and draft.conf is not None:
         # calibration: trunk confidences vs trunk-node acceptance (greedy ok)
-        trunk_ok = res["ok"][:, 1:g] if res.get("ok") is not None else None
-        out["conf"] = conf
+        g = bundle.spec.gamma
+        trunk_ok = (res["ok"][:, 1:g] if res.get("ok") is not None else None)
+        out["conf"] = draft.conf
         out["trunk_ok"] = trunk_ok
-    return est2, out
-
-
-def _splice(trunk, branch_tokens, fork_idx):
-    """Per-branch completed block: trunk up to fork, branch tokens after.
-
-    trunk [B,g-1], branch_tokens [B,K,g-1], fork_idx [B,K] -> [B,K,g-1]
-    flattened to the 'trunk' argument shape expected by vp_blocks per branch.
-    Used only to build third-level visible prefixes.
-    """
-    b, k = fork_idx.shape
-    slot = jnp.arange(1, trunk.shape[1] + 1)[None, None, :]
-    use_trunk = slot <= fork_idx[:, :, None]
-    return jnp.where(use_trunk, trunk[:, None, :], branch_tokens)
-
-
-def _max_children(mode, kbr, third_level):
-    if mode in ("dflash", "eagle"):
-        return 1
-    base = kbr + 1
-    return base + 1 if third_level else base
-
-
-def _draft_probs(tree, d1_logits, d2_logits, fork_idx, g, temp, mode):
-    """Assemble per-node drafter categoricals q_n [B,N,V] for sampling
-    verification. Trunk slots from d1; branch slots from d2 (or d1 resample
-    dist for naive_k)."""
-    b, n = tree.tokens.shape
-    v = d1_logits.shape[-1]
-    q1 = jax.nn.softmax(d1_logits.astype(jnp.float32) / temp, axis=-1)
-    slot = jnp.clip(tree.depth, 0, g - 1)                      # [B,N]
-    q_trunk = jnp.take_along_axis(q1, slot[..., None], axis=1)
-    if d2_logits is None:
-        return q_trunk
-    node = jnp.arange(n)
-    k = d2_logits.shape[1]
-    bidx = jnp.clip((node - g) // (g - 1), 0, k - 1)
-    q2 = jax.nn.softmax(d2_logits.astype(jnp.float32) / temp, axis=-1)
-    q2_flat = q2.reshape(b, k * g, v)
-    sel = bidx[None, :] * g + slot                             # [B,N]
-    q_branch = jnp.take_along_axis(q2_flat, sel[..., None], axis=1)
-    is_trunk = (node < g)[None, :, None]
-    return jnp.where(is_trunk, q_trunk, q_branch)
-
-
-# ------------------------------------------------- SSM / hybrid verify -----
-def _branch_batch_verify(bundle, est, tree: tree_lib.Tree, temp, key):
-    """DESIGN §5.1: verification for recurrent targets.
-
-    Enumerate the root-to-leaf token sequence of every branch (K+1 rows of
-    length gamma), run the target once with branches folded into batch and
-    per-row causal order (read-only states), pick the best row per example,
-    then REPLAY the accepted path with write_kv + snap_at to advance all
-    states by exactly n_commit tokens.
-    """
-    tcfg = bundle.target_cfg
-    g = tree.max_depth + 1
-    b, n = tree.tokens.shape
-    # enumerate root-to-leaf token rows (comb: trunk + one per branch)
-    rows = _paths_to_leaves(tree)                              # [B, R, g]
-    r = rows.shape[1]
-    row_tokens = jnp.take_along_axis(
-        jnp.repeat(tree.tokens, r, axis=0),                    # [B*R, N]
-        rows.reshape(b * r, g), axis=1)                        # [B*R, g]
-
-    def rep(key_name, a):
-        if not hasattr(a, "ndim") or a.ndim == 0:
-            return a
-        axis = 1 if key_name.startswith("p") else 0            # stacked periods
-        return jnp.repeat(a, r, axis=axis)
-
-    states_rep = {k2: (jax.tree.map(lambda a: rep(k2, a), v)
-                       if isinstance(v, dict) else rep(k2, v))
-                  for k2, v in est["target"].items()}
-    vout = lm.forward(bundle.target_params, row_tokens, tcfg,
-                      states=states_rep, write_kv=False, remat=False)
-    logits = vout["logits"].astype(jnp.float32)                # [B*R, g, V]
-
-    # NOTE temp>0: per-row chain rejection sampling would need per-row
-    # residual bookkeeping; we use greedy acceptance on the sampled drafts
-    # for SSM targets (approximation documented in DESIGN §5.1).
-    pred_full = jnp.argmax(logits, axis=-1)                    # [B*R, g]
-    ok = (pred_full[:, :-1] == row_tokens[:, 1:])
-    # padded path entries repeat the leaf node; mask beyond leaf depth
-    depth_leaf = jnp.take_along_axis(
-        tree.depth, rows.reshape(b, r, g)[:, :, -1], axis=1)   # [B,R]
-    ok = ok & (jnp.arange(g - 1)[None, :] <
-               depth_leaf.reshape(b * r)[:, None])
-    n_acc_r = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(1).reshape(b, r)
-    best_row = jnp.argmax(n_acc_r, axis=1)
-    n_acc = jnp.take_along_axis(n_acc_r, best_row[:, None], 1)[:, 0]
-    path = jnp.take_along_axis(
-        rows, best_row[:, None, None].repeat(g, 2), axis=1)[:, 0]  # [B,g]
-    pred_best = jnp.take_along_axis(
-        pred_full.reshape(b, r, g),
-        best_row[:, None, None].repeat(g, 2), axis=1)[:, 0]    # [B,g]
-    bonus = jnp.take_along_axis(pred_best, n_acc[:, None], axis=1)[:, 0]
-
-    # replay accepted path to advance states by exactly n_commit
-    n_commit = n_acc + 1
-    path_tokens = jnp.take_along_axis(tree.tokens, path, axis=1)   # [B,g]
-    rout = lm.forward(bundle.target_params, path_tokens, tcfg,
-                      states=est["target"], write_kv=True,
-                      snap_at=n_commit, attend_cache_on_write=True,
-                      want_features=True, want_logits=False, remat=False)
-    res = {"best": jnp.take_along_axis(path, n_acc[:, None], 1)[:, 0],
-           "n_acc": n_acc, "path": path, "bonus": bonus.astype(jnp.int32),
-           "accepted": None, "ok": None}
-    return res, rout["states"], rout["features"]
-
-
-def _paths_to_leaves(tree: tree_lib.Tree):
-    """[B, R, g] node-index rows, one per leaf (trunk + each branch).
-
-    Rows are recovered via parent walks from the deepest node of each branch
-    segment; static for the comb/chain layouts produced in this module.
-    """
-    b, n = tree.tokens.shape
-    g = tree.max_depth + 1
-    # leaf candidates: trunk leaf = node g-1 ; branch leaves = last valid
-    # node of each (g-1)-sized branch segment. For chain trees n == g (+0).
-    if n == g:                                     # chain
-        leaves = jnp.broadcast_to(jnp.arange(1) + (n - 1), (b, 1))
-    else:
-        k = (n - g) // (g - 1)
-        seg_last = []
-        for s in range(k):
-            start = g + s * (g - 1)
-            seg = jnp.arange(start, start + g - 1)
-            validity = tree.valid[:, seg]
-            # last valid node in segment (fork at g-2 -> single node)
-            last_off = jnp.maximum(validity.sum(1) - 1, 0)
-            seg_last.append(start + last_off)
-        leaves = jnp.stack([jnp.full((b,), g - 1)] + seg_last, axis=1)
-    rws = []
-    cur = leaves
-    rws.append(cur)
-    for _ in range(g - 1):
-        cur = jnp.maximum(
-            jnp.take_along_axis(tree.parent, cur, axis=1), 0)
-        rws.append(cur)
-    up = jnp.stack(rws, axis=2)                    # [B, R, g] leaf->root
-    depth_leaf = jnp.take_along_axis(tree.depth, leaves, axis=1)  # [B,R]
-    d_idx = jnp.arange(g)[None, None, :]
-    take = jnp.clip(depth_leaf[:, :, None] - d_idx, 0, g - 1)
-    path = jnp.take_along_axis(up, take, axis=2)
-    # pad beyond leaf depth with the leaf itself (token garbage but the
-    # acceptance count never exceeds leaf depth because pred!=token there
-    # cannot extend past the leaf — we additionally clamp below)
-    path = jnp.where(d_idx <= depth_leaf[:, :, None], path,
-                     leaves[:, :, None])
-    return path
+    return state2, out
 
 
 # -------------------------------------------------------------- generate ---
+# Module-level jit: SpecBundle's aux (configs) is hashable, so repeated
+# generate() calls with the same shapes hit the trace cache instead of
+# re-tracing a fresh closure per call.
+_cycle_jit = functools.partial(
+    jax.jit, static_argnames=("collect_stats",))(decode_cycle)
+
+
 def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
              max_len: Optional[int] = None, collect_stats: bool = True):
     """Generate up to ``max_new`` tokens for prompts [B, P] (host loop over
     jitted cycles). Returns dict(tokens [B, max_new], n_cycles, alpha, stats).
+
+    Back-compat wrapper: use :func:`generate_ondevice` when you do not need
+    per-cycle calibration stats — it avoids the per-cycle host sync.
     """
     import numpy as np
 
@@ -450,13 +134,14 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
     g = bundle.spec.gamma
     key = key if key is not None else jax.random.PRNGKey(0)
     max_len = max_len or (p + max_new + 2 * g + 8)
-    est = engine_init(bundle, b, max_len)
+    state = engine_init(bundle, b, max_len)
     kpre, key = jax.random.split(key)
-    est = prefill(bundle, est, prompts, key=kpre,
-                  temperature=bundle.spec.temperature)
-    first = np.asarray(est["anchor"])
+    state = prefill(bundle, state, prompts, key=kpre, ctx=ctx,
+                    temperature=bundle.spec.temperature)
+    first = np.asarray(state.anchor)
 
-    cycle = jax.jit(lambda e, k: decode_cycle(bundle, e, k, collect_stats))
+    def cycle(s, k):
+        return _cycle_jit(bundle, s, k, collect_stats=collect_stats)
 
     out_buf = np.zeros((b, max_new + g + 1), np.int32)
     out_buf[:, 0] = first
@@ -465,7 +150,7 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
     stats = {"n_acc": [], "n_out": [], "conf": [], "trunk_ok": []}
     while filled.min() < max_new:
         key, sub = jax.random.split(key)
-        est, out = cycle(est, sub)
+        state, out = cycle(state, sub)
         toks = np.asarray(out["tokens"])
         n_out = np.asarray(out["n_out"])
         for i in range(b):
@@ -482,6 +167,72 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
                 stats["trunk_ok"].append(np.asarray(out["trunk_ok"]))
         if n_cycles > max_new + 8:
             break
-    alpha = float(np.concatenate(stats["n_out"]).mean()) if stats["n_out"] else 0.0
+    alpha = (float(np.concatenate(stats["n_out"]).mean())
+             if stats["n_out"] else 0.0)
     return {"tokens": out_buf[:, :max_new], "n_cycles": n_cycles,
             "alpha": alpha, "stats": stats}
+
+
+@functools.partial(jax.jit, static_argnames=("max_new", "max_len"))
+def _ondevice_loop(bundle: SpecBundle, prompts, key, max_new: int,
+                   max_len: int):
+    """Prefill + full decode loop inside one ``lax.while_loop``.
+
+    Returns (buf [B, max_new+g+1], n_cycles [], total_out []) — all on
+    device; the caller slices / casts.
+    """
+    b, _ = prompts.shape
+    cap = buf_width = max_new + bundle.spec.gamma + 1
+    cycle_cap = max_new + 9          # mirrors the host loop's bailout
+
+    state = engine_init(bundle, b, max_len)
+    kpre, key = jax.random.split(key)
+    state = prefill(bundle, state, prompts, key=kpre,
+                    temperature=bundle.spec.temperature)
+    buf = jnp.zeros((b, buf_width), jnp.int32).at[:, 0].set(state.anchor)
+    filled = jnp.ones((b,), jnp.int32)
+
+    def cond(carry):
+        _, _, filled, _, n_cycles, _ = carry
+        return (filled.min() < max_new) & (n_cycles < cycle_cap)
+
+    def body(carry):
+        state, buf, filled, key, n_cycles, total = carry
+        key, sub = jax.random.split(key)
+        state, out = decode_cycle(bundle, state, sub, collect_stats=False)
+        t = out["tokens"].shape[1]
+        idx = filled[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+        valid = jnp.arange(t)[None, :] < out["n_out"][:, None]
+        # out-of-budget / invalid slots scatter to index cap -> dropped
+        wpos = jnp.where(valid, jnp.minimum(idx, cap), cap)
+        bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, t))
+        buf = buf.at[bidx, wpos].set(out["tokens"], mode="drop")
+        filled = jnp.minimum(filled + out["n_out"], buf_width)
+        return (state, buf, filled, key, n_cycles + 1,
+                total + out["n_out"].sum())
+
+    carry = (state, buf, filled, key, jnp.zeros((), jnp.int32),
+             jnp.zeros((), jnp.int32))
+    _, buf, _, _, n_cycles, total = jax.lax.while_loop(cond, body, carry)
+    return buf, n_cycles, total
+
+
+def generate_ondevice(bundle: SpecBundle, prompts, max_new: int, key=None,
+                      max_len: Optional[int] = None):
+    """On-device generation: the whole decode loop runs inside a single
+    ``jax.lax.while_loop`` with a padded output buffer — zero host syncs
+    between cycles. Token-identical to :func:`generate` for the same key
+    (same prefill/cycle key schedule, same commit rule); calibration stats
+    are not collected on this path.
+
+    Returns dict(tokens [B, max_new] device array, n_cycles, alpha).
+    """
+    b, p = prompts.shape
+    g = bundle.spec.gamma
+    key = key if key is not None else jax.random.PRNGKey(0)
+    max_len = max_len or (p + max_new + 2 * g + 8)
+    buf, n_cycles, total = _ondevice_loop(bundle, prompts, key, max_new,
+                                          max_len)
+    n = int(n_cycles)
+    alpha = float(total) / (n * b) if n else 0.0
+    return {"tokens": buf[:, :max_new], "n_cycles": n, "alpha": alpha}

@@ -1,0 +1,104 @@
+"""Typed decode-engine state.
+
+:class:`EngineState` is the single pytree that flows through the decode
+loop — target model states (KV caches / recurrent states), the two
+drafter feature caches, and the anchor token of the next block. It is
+frozen and pytree-registered, so it jits, donates, and crosses a
+``jax.lax.while_loop`` boundary unchanged; every cycle produces a *new*
+EngineState via :meth:`replace`.
+
+Field shapes are allocated once per request wave by :func:`engine_init`
+(static ``batch`` / ``max_len``), which is what lets the whole generation
+loop run on device without host round-trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import drafter as dr
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Per-wave decode state (all leaves batched on axis 0 or equivalent).
+
+    target:  ``lm.init_states`` dict — per-layer KV caches / recurrent
+             states plus per-example committed ``length`` [B].
+    d1_feat: first-drafter feature cache (``drafter.init_feat_cache``).
+    d2_feat: second-drafter feature cache.
+    anchor:  [B] int32 — the bonus token that roots the next draft block.
+    """
+    target: Dict[str, Any]
+    d1_feat: Dict[str, Any]
+    d2_feat: Dict[str, Any]
+    anchor: jnp.ndarray
+
+    @property
+    def length(self) -> jnp.ndarray:
+        """[B] number of committed target positions."""
+        return self.target["length"]
+
+    @property
+    def batch(self) -> int:
+        return self.anchor.shape[0]
+
+    def replace(self, **kw) -> "EngineState":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_pytree_node(
+    EngineState,
+    lambda s: ((s.target, s.d1_feat, s.d2_feat, s.anchor), None),
+    lambda _, ch: EngineState(*ch),
+)
+
+
+def engine_init(bundle, batch: int, max_len: int,
+                ctx_len: int = 0) -> EngineState:
+    """Allocate caches for a request wave (``bundle``: pipeline.SpecBundle)."""
+    tcfg = bundle.target_cfg
+    dt = jnp.dtype(tcfg.dtype)
+    return EngineState(
+        target=lm.init_states(tcfg, batch, max_len, ctx_len=ctx_len,
+                              dtype=dt),
+        d1_feat=dr.init_feat_cache(bundle.d1_cfg, batch, max_len,
+                                   dtype=jnp.dtype(bundle.d1_cfg.dtype)),
+        d2_feat=dr.init_feat_cache(bundle.d2_cfg, batch, max_len,
+                                   dtype=jnp.dtype(bundle.d2_cfg.dtype)),
+        anchor=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def prefill(bundle, state: EngineState, prompts, key=None, ctx=None,
+            temperature: float = 0.0) -> EngineState:
+    """Process prompts [B, P]; sets anchor = first generated token.
+
+    cache_len is passed as a SCALAR 0: prefill always starts at offset 0, so
+    the KV write lowers to dynamic-update-slice (partitionable along the
+    kv_seq axis with zero communication) instead of a gather-scatter
+    (§Perf: this was 2x9.6GB/layer of all-gather on 32k prefill).
+    """
+    out = lm.forward(bundle.target_params, prompts, bundle.target_cfg,
+                     states=state.target, cache_len=jnp.zeros((), jnp.int32),
+                     write_kv=True, ctx=ctx, want_features=True, remat=False)
+    b, p = prompts.shape
+    positions = jnp.broadcast_to(jnp.arange(p)[None], (b, p))
+    d1_feat = dr.extend_feat_cache(
+        bundle.d1_params, bundle.d1_cfg, state.d1_feat, out["features"],
+        positions, jnp.full((b,), p))
+    d2_feat = dr.extend_feat_cache(
+        bundle.d2_params, bundle.d2_cfg, state.d2_feat, out["features"],
+        positions, jnp.full((b,), p))
+    last = out["logits"][:, -1].astype(jnp.float32)
+    if temperature > 0:
+        anchor = jax.random.categorical(key, last / temperature)
+    else:
+        anchor = jnp.argmax(last, axis=-1)
+    return state.replace(target=out["states"], d1_feat=d1_feat,
+                         d2_feat=d2_feat,
+                         anchor=anchor.astype(jnp.int32))

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class Tree:
     tokens: jnp.ndarray      # [B, N] int32
     parent: jnp.ndarray      # [B, N] int32 (parent[0] = -1)

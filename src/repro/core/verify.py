@@ -1,5 +1,7 @@
-"""Verification: greedy longest-prefix and lossless multi-branch sampling.
+"""Verification: acceptance rules + pluggable target-side verify backends.
 
+Acceptance rules
+----------------
 Greedy (T=0): node n is ok iff argmax(target logits at parent(n)) == token(n);
 acceptance propagates along ancestors; commit the deepest accepted node's
 path; bonus = target argmax at that node. This makes D2SD output *exactly*
@@ -12,14 +14,32 @@ prob min(1, p(x)/q_c(x)); on rejection p <- normalize(max(p - q_c, 0)).
 If no child is accepted the bonus is sampled from the final residual. The
 committed-token distribution equals the target's exactly (lossless) whenever
 sibling tokens were drawn independently from their q_c's.
+
+Backends
+--------
+A :class:`VerifierBackend` runs the target model over a candidate tree and
+commits the accepted path. Two implementations exist, selected from the
+target :class:`~repro.config.base.ModelConfig` by :func:`select_backend`:
+
+* :class:`TreeAttentionVerifier` — one forward over the whole tree with an
+  ancestor attention mask, then a KV gather-commit. Requires every layer to
+  be maskable attention (no recurrent/rwkv blocks).
+* :class:`StateReplayVerifier` — DESIGN §5.1: enumerate root-to-leaf rows,
+  fold them into the batch axis for a read-only forward, then replay the
+  accepted path with ``snap_at`` to advance recurrent states exactly.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import tree as tree_lib
 from repro.core.tree import (Tree, best_path, children_table,
                              propagate_acceptance)
+from repro.models import lm
 
 
 def greedy_verify(tree: Tree, target_logits):
@@ -105,6 +125,195 @@ def sampling_verify(tree: Tree, target_logits, draft_probs, key,
     path = jnp.stack(chosen_path, axis=1)                     # [B, D+1]
     return {"best": cur, "n_acc": n_acc, "path": path, "bonus": bonus,
             "accepted": accepted_nodes, "ok": accepted_nodes}
+
+
+# ------------------------------------------------------------- backends ----
+@dataclasses.dataclass(frozen=True)
+class VerifyOutcome:
+    """Result of one target-side verification pass.
+
+    res:        acceptance dict (best/n_acc/path/bonus/accepted/ok) as
+                produced by greedy_verify / sampling_verify.
+    target:     advanced target states (committed by exactly n_acc+1 tokens).
+    path_feats: [B, D+1, Fd] target features along the accepted path (input
+                to the drafter feature-cache extension).
+    """
+    res: dict
+    target: Any
+    path_feats: jnp.ndarray
+
+
+class VerifierBackend:
+    """Protocol: run the target over a tree and commit the accepted path."""
+
+    name: str = "?"
+
+    def verify(self, bundle, state, tree: Tree, dprobs, max_children: int,
+               key) -> VerifyOutcome:
+        raise NotImplementedError
+
+
+def uses_tree_attention(cfg) -> bool:
+    """Tree-masked verification requires a pure-attention target."""
+    kinds = set(cfg.pattern_for_depth())
+    return not (kinds & {"recurrent", "rwkv"})
+
+
+def select_backend(cfg) -> VerifierBackend:
+    """Pick the verify backend from target-model capabilities."""
+    return (TreeAttentionVerifier() if uses_tree_attention(cfg)
+            else StateReplayVerifier())
+
+
+class TreeAttentionVerifier(VerifierBackend):
+    """Cascade tree-attention verify + KV gather-commit (attention targets)."""
+
+    name = "tree_attention"
+
+    def verify(self, bundle, state, tree, dprobs, max_children, key):
+        tcfg = bundle.target_cfg
+        temp = bundle.spec.temperature
+        mask = tree_lib.attention_mask(tree)
+        positions = tree_lib.positions(tree, state.target["length"])
+        vout = lm.forward(bundle.target_params, tree.tokens, tcfg,
+                          states=state.target, write_kv=False,
+                          extra_mask=mask, positions=positions,
+                          want_features=True, remat=False)
+        logits = vout["logits"].astype(jnp.float32)
+        logits = jnp.where(tree.valid[:, :, None], logits, -1e9)
+        if temp > 0:
+            res = sampling_verify(tree, logits, dprobs, key,
+                                  max_children=max_children,
+                                  temperature=temp)
+        else:
+            res = greedy_verify(tree, logits)
+        # commit KV by gathering the accepted path from the verify pass
+        n_commit = res["n_acc"] + 1
+        new_target = lm.commit_kv(state.target, vout["kv_outs"], tcfg,
+                                  res["path"], n_commit)
+        path_feats = jnp.take_along_axis(
+            vout["features"], res["path"][..., None], axis=1)
+        return VerifyOutcome(res=res, target=new_target,
+                             path_feats=path_feats)
+
+
+class StateReplayVerifier(VerifierBackend):
+    """DESIGN §5.1: verification for recurrent (SSM / hybrid) targets.
+
+    Enumerate the root-to-leaf token sequence of every branch (K+1 rows of
+    length gamma), run the target once with branches folded into batch and
+    per-row causal order (read-only states), pick the best row per example,
+    then REPLAY the accepted path with write_kv + snap_at to advance all
+    states by exactly n_commit tokens.
+
+    NOTE temp>0: per-row chain rejection sampling would need per-row
+    residual bookkeeping; we use greedy acceptance on the sampled drafts
+    for SSM targets (approximation documented in DESIGN §5.1); ``dprobs``
+    is ignored.
+    """
+
+    name = "state_replay"
+
+    def verify(self, bundle, state, tree, dprobs, max_children, key):
+        del dprobs, max_children, key
+        tcfg = bundle.target_cfg
+        g = tree.max_depth + 1
+        b, n = tree.tokens.shape
+        # enumerate root-to-leaf token rows (comb: trunk + one per branch)
+        rows = _paths_to_leaves(tree)                          # [B, R, g]
+        r = rows.shape[1]
+        row_tokens = jnp.take_along_axis(
+            jnp.repeat(tree.tokens, r, axis=0),                # [B*R, N]
+            rows.reshape(b * r, g), axis=1)                    # [B*R, g]
+
+        def rep(key_name, a):
+            if not hasattr(a, "ndim") or a.ndim == 0:
+                return a
+            axis = 1 if key_name.startswith("p") else 0        # stacked periods
+            return jnp.repeat(a, r, axis=axis)
+
+        states_rep = {k2: (jax.tree.map(lambda a: rep(k2, a), v)
+                           if isinstance(v, dict) else rep(k2, v))
+                      for k2, v in state.target.items()}
+        vout = lm.forward(bundle.target_params, row_tokens, tcfg,
+                          states=states_rep, write_kv=False, remat=False)
+        logits = vout["logits"].astype(jnp.float32)            # [B*R, g, V]
+
+        pred_full = jnp.argmax(logits, axis=-1)                # [B*R, g]
+        ok = (pred_full[:, :-1] == row_tokens[:, 1:])
+        # padded path entries repeat the leaf node; mask beyond leaf depth
+        depth_leaf = jnp.take_along_axis(
+            tree.depth, rows.reshape(b, r, g)[:, :, -1], axis=1)   # [B,R]
+        ok = ok & (jnp.arange(g - 1)[None, :] <
+                   depth_leaf.reshape(b * r)[:, None])
+        n_acc_r = (jnp.cumprod(ok.astype(jnp.int32), axis=1)
+                   .sum(1).reshape(b, r))
+        best_row = jnp.argmax(n_acc_r, axis=1)
+        n_acc = jnp.take_along_axis(n_acc_r, best_row[:, None], 1)[:, 0]
+        path = jnp.take_along_axis(
+            rows, best_row[:, None, None].repeat(g, 2), axis=1)[:, 0]
+        pred_best = jnp.take_along_axis(
+            pred_full.reshape(b, r, g),
+            best_row[:, None, None].repeat(g, 2), axis=1)[:, 0]  # [B,g]
+        bonus = jnp.take_along_axis(pred_best, n_acc[:, None], axis=1)[:, 0]
+
+        # replay accepted path to advance states by exactly n_commit
+        n_commit = n_acc + 1
+        path_tokens = jnp.take_along_axis(tree.tokens, path, axis=1)  # [B,g]
+        rout = lm.forward(bundle.target_params, path_tokens, tcfg,
+                          states=state.target, write_kv=True,
+                          snap_at=n_commit, attend_cache_on_write=True,
+                          want_features=True, want_logits=False, remat=False)
+        res = {"best": jnp.take_along_axis(path, n_acc[:, None], 1)[:, 0],
+               "n_acc": n_acc, "path": path,
+               "bonus": bonus.astype(jnp.int32),
+               "accepted": None, "ok": None}
+        return VerifyOutcome(res=res, target=rout["states"],
+                             path_feats=rout["features"])
+
+
+def _paths_to_leaves(tree: Tree):
+    """[B, R, g] node-index rows, one per leaf (trunk + each branch).
+
+    Rows are recovered via parent walks from the deepest node of each branch
+    segment; static for the comb/chain layouts produced by the built-in
+    strategies.
+    """
+    b, n = tree.tokens.shape
+    g = tree.max_depth + 1
+    # leaf candidates: trunk leaf = node g-1 ; branch leaves = last valid
+    # node of each (g-1)-sized branch segment. For chain trees n == g (+0).
+    if n == g:                                     # chain
+        leaves = jnp.broadcast_to(jnp.arange(1) + (n - 1), (b, 1))
+    else:
+        k = (n - g) // (g - 1)
+        seg_last = []
+        for s in range(k):
+            start = g + s * (g - 1)
+            seg = jnp.arange(start, start + g - 1)
+            validity = tree.valid[:, seg]
+            # last valid node in segment (fork at g-2 -> single node)
+            last_off = jnp.maximum(validity.sum(1) - 1, 0)
+            seg_last.append(start + last_off)
+        leaves = jnp.stack([jnp.full((b,), g - 1)] + seg_last, axis=1)
+    rws = []
+    cur = leaves
+    rws.append(cur)
+    for _ in range(g - 1):
+        cur = jnp.maximum(
+            jnp.take_along_axis(tree.parent, cur, axis=1), 0)
+        rws.append(cur)
+    up = jnp.stack(rws, axis=2)                    # [B, R, g] leaf->root
+    depth_leaf = jnp.take_along_axis(tree.depth, leaves, axis=1)  # [B,R]
+    d_idx = jnp.arange(g)[None, None, :]
+    take = jnp.clip(depth_leaf[:, :, None] - d_idx, 0, g - 1)
+    path = jnp.take_along_axis(up, take, axis=2)
+    # pad beyond leaf depth with the leaf itself (token garbage but the
+    # acceptance count never exceeds leaf depth because pred!=token there
+    # cannot extend past the leaf — we additionally clamp below)
+    path = jnp.where(d_idx <= depth_leaf[:, :, None], path,
+                     leaves[:, :, None])
+    return path
 
 
 def chain_prefix_accept_greedy(tokens, target_logits):

@@ -1,0 +1,55 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The codebase targets the current explicit-sharding API (``jax.shard_map``
+with ``check_vma``, ``jax.make_mesh(..., axis_types=...)``); older jax
+(<= 0.4.x) ships ``jax.experimental.shard_map.shard_map`` with the
+equivalent ``check_rep`` flag and a ``make_mesh`` without ``axis_types``.
+Route every call through here so the rest of the tree stays on the new
+spelling.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+_HAS_TOP_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_AXIS_TYPES = (hasattr(jax.sharding, "AxisType")
+                   and "axis_types" in
+                   inspect.signature(jax.make_mesh).parameters)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax; experimental shard_map on old.
+
+    ``check_vma`` (new name) == ``check_rep`` (old name): let shard_map
+    prove psum'd outputs replicated so it skips the output all-gather.
+    """
+    if _HAS_TOP_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def pvary(x, axes):
+    """``jax.lax.pvary`` (mark an array device-varying over manual axes).
+
+    Old jax has no varying-manual-axes tracking — its ``check_rep``
+    machinery treats replicated operands as compatible with sharded ones —
+    so the shim is the identity there.
+    """
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, tuple(axes))
+    return x
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` with Auto axis_types when the API supports them."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if _HAS_AXIS_TYPES:
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kw)

@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models.attention import (NEG_INF, attend, attend_chunked,
                                     merge_attn_stats, softcap)
 from repro.distributed import sharding as sh
+from repro.distributed import compat
 
 
 def kv_seq_axis() -> Optional[str]:
@@ -87,7 +88,7 @@ def sharded_cache_attend(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
         # ---- cache slice partials ----
         # mask by absolute key position (rolling caches store position
         # p at slot p % cap, recovered against the local slot offset)
-        acc, m, l = _cache_stats(jax.lax.pvary(qs, (axis,)), ck, cv,
+        acc, m, l = _cache_stats(compat.pvary(qs, (axis,)), ck, cv,
                                  offset=offset, cap=cap,
                                  clen=cl, qab=qab, window=window,
                                  attn_softcap=attn_softcap, rolling=rolling,
@@ -113,7 +114,7 @@ def sharded_cache_attend(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
     # check_vma=True: psum/pmax establish replication over the kv_seq axis,
     # so shard_map emits NO output all-gather (the check_vma=False baseline
     # re-gathered the merged output redundantly — §Perf iteration 1).
-    return jax.shard_map(
+    return compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(bspec), P(bspec, axis), P(bspec, axis), P(bspec),
                   P(bspec), P(bspec), P(bspec), P(bspec)),

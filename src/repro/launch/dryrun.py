@@ -49,11 +49,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     multi = mesh_kind == "multi"
     n_chips = 512 if multi else 256
     devices = jax.devices()[:n_chips]
-    mesh = jax.make_mesh(
+    from repro.distributed.compat import make_mesh as compat_make_mesh
+    mesh = compat_make_mesh(
         (2, 16, 16) if multi else (16, 16),
         ("pod", "data", "model") if multi else ("data", "model"),
-        devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * (3 if multi else 2))
+        devices=devices)
 
     cell = steps_lib.build_cell(arch, shape_name, gamma=gamma,
                                 k_branches=k_branches,

@@ -1,24 +1,23 @@
 """Production mesh factory (assignment: MULTI-POD DRY-RUN item 1).
 
 A FUNCTION, not a module constant — importing this module never touches jax
-device state.
+device state. Mesh construction goes through
+:mod:`repro.distributed.compat` so the Auto ``axis_types`` kwarg is only
+passed on jax versions that understand it.
 """
 from __future__ import annotations
 
-import jax
+from repro.distributed import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(data: int, model: int, pod: int = 1):
     """Arbitrary mesh for tests / small-scale runs."""
     if pod > 1:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))

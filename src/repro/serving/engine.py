@@ -1,10 +1,13 @@
 """Batched D2SD serving engine.
 
-Wave-based continuous batching: requests queue up, waves of ``batch_size``
-uniform-prompt-length requests run the speculative decode loop together
-(per-example ragged lengths inside a wave are native — the engine state
-carries per-request cache lengths). Tracks per-request and aggregate
-acceptance/latency statistics.
+Wave-based continuous batching over the typed decode-engine API: requests
+queue up, waves of ``batch_size`` uniform-prompt-length requests prefill
+once into one :class:`~repro.core.state.EngineState` and then advance via
+the per-cycle :meth:`ServingEngine.step` API. Because ``step`` owns one
+decode cycle (not a whole ``generate`` call), a wave can mix requests with
+different ``max_new`` without re-prefilling: finished requests simply stop
+accumulating tokens and the wave retires when the last one is done.
+Tracks per-request and aggregate acceptance/latency statistics.
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.core import pipeline as pl
+from repro.core.state import EngineState
 
 
 @dataclasses.dataclass
@@ -28,6 +32,22 @@ class Request:
     latency_s: float = 0.0
 
 
+@dataclasses.dataclass
+class Wave:
+    """One in-flight batch: typed engine state + per-request output books."""
+    requests: List[Request]
+    state: EngineState
+    bufs: np.ndarray            # [B, cap] committed tokens (slot 0 = anchor)
+    filled: np.ndarray          # [B] tokens committed so far
+    targets: np.ndarray         # [B] per-request max_new
+    t0: float
+    cycles: int = 0
+
+    @property
+    def done(self) -> bool:
+        return bool((self.filled >= self.targets).all())
+
+
 class ServingEngine:
     def __init__(self, bundle: pl.SpecBundle, batch_size: int = 8,
                  seed: int = 0):
@@ -36,11 +56,21 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
+        self._next_uid = 0
+        self.wave: Optional[Wave] = None
+        # shares pipeline's module-level trace cache across engine instances
+        self._cycle = lambda s, k: pl._cycle_jit(self.bundle, s, k,
+                                                 collect_stats=False)
         self.stats = {"tokens": 0, "cycles": 0, "accepted": 0,
-                      "wall_s": 0.0, "waves": 0}
+                      "wall_s": 0.0, "waves": 0, "alpha": 0.0}
+        self._alpha_num = 0
+        self._alpha_den = 0
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
-        uid = len(self.queue) + len(self.done)
+        # Monotonic uid: len(queue)+len(done) would collide once a wave
+        # drains the queue mid-run.
+        uid = self._next_uid
+        self._next_uid += 1
         self.queue.append(Request(uid, np.asarray(prompt, np.int32),
                                   max_new))
         return uid
@@ -57,28 +87,81 @@ class ServingEngine:
             self.queue.remove(r)
         return wave
 
+    # ------------------------------------------------------ step API ------
+    def start_wave(self) -> bool:
+        """Prefill the next wave of requests. Returns False if queue empty."""
+        assert self.wave is None, "finish the active wave first"
+        reqs = self._next_wave()
+        if not reqs:
+            return False
+        prompts = np.stack([r.prompt for r in reqs])
+        b, p = prompts.shape
+        g = self.bundle.spec.gamma
+        targets = np.array([r.max_new for r in reqs], np.int64)
+        cap = int(targets.max()) + g + 1
+        max_len = p + cap + 2 * g + 8
+        state = pl.engine_init(self.bundle, b, max_len)
+        self.key, sub = jax.random.split(self.key)
+        state = pl.prefill(self.bundle, state, prompts, key=sub,
+                           temperature=self.bundle.spec.temperature)
+        bufs = np.zeros((b, cap), np.int32)
+        bufs[:, 0] = np.asarray(state.anchor)
+        self.wave = Wave(requests=reqs, state=state, bufs=bufs,
+                         filled=np.ones((b,), np.int64), targets=targets,
+                         t0=time.time())
+        return True
+
+    def step(self) -> bool:
+        """Run ONE decode cycle for the active wave and bank its tokens.
+
+        Returns True while the wave still has unfinished requests; on the
+        cycle that finishes the last request the wave retires into ``done``
+        and False is returned.
+        """
+        w = self.wave
+        assert w is not None, "no active wave — call start_wave()"
+        self.key, sub = jax.random.split(self.key)
+        w.state, out = self._cycle(w.state, sub)
+        toks = np.asarray(out["tokens"])
+        n_out = np.asarray(out["n_out"])
+        cap = w.bufs.shape[1]
+        for i in range(len(w.requests)):
+            m = min(int(n_out[i]), cap - int(w.filled[i]))
+            if m > 0:
+                w.bufs[i, w.filled[i]: w.filled[i] + m] = toks[i, :m]
+        w.filled = np.minimum(w.filled + n_out, cap)
+        w.cycles += 1
+        self._alpha_num += int(n_out.sum())
+        self._alpha_den += len(w.requests)
+        if w.done or w.cycles > int(w.targets.max()) + 8:
+            self._finish_wave()
+            return False
+        return True
+
+    def _finish_wave(self) -> None:
+        w = self.wave
+        dt = time.time() - w.t0
+        for i, r in enumerate(w.requests):
+            r.out = w.bufs[i, : r.max_new]
+            r.n_cycles = w.cycles
+            r.latency_s = dt
+            self.done.append(r)
+        self.stats["tokens"] += int(sum(min(r.max_new, w.bufs.shape[1])
+                                        for r in w.requests))
+        self.stats["cycles"] += w.cycles * len(w.requests)
+        self.stats["wall_s"] += dt
+        self.stats["waves"] += 1
+        self.stats["alpha"] = (self._alpha_num / self._alpha_den
+                               if self._alpha_den else 0.0)
+        self.wave = None
+
+    # ----------------------------------------------------- drain loop -----
     def run(self) -> Dict:
-        while self.queue:
-            wave = self._next_wave()
-            prompts = np.stack([r.prompt for r in wave])
-            max_new = max(r.max_new for r in wave)
-            self.key, sub = jax.random.split(self.key)
-            t0 = time.time()
-            out = pl.generate(self.bundle, prompts, max_new=max_new,
-                              key=sub, collect_stats=False)
-            dt = time.time() - t0
-            for i, r in enumerate(wave):
-                r.out = out["tokens"][i, : r.max_new]
-                r.n_cycles = out["n_cycles"]
-                r.latency_s = dt
-                self.done.append(r)
-            n_tok = sum(min(r.max_new, out["tokens"].shape[1])
-                        for r in wave)
-            self.stats["tokens"] += n_tok
-            self.stats["cycles"] += out["n_cycles"] * len(wave)
-            self.stats["wall_s"] += dt
-            self.stats["waves"] += 1
-            self.stats["alpha"] = out["alpha"]
+        while self.queue or self.wave is not None:
+            if self.wave is None and not self.start_wave():
+                break
+            while self.step():
+                pass
         s = dict(self.stats)
         s["tokens_per_s"] = (s["tokens"] / s["wall_s"]
                              if s["wall_s"] else 0.0)

@@ -1,0 +1,60 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+The container image does not ship hypothesis and tier-1 cannot install
+packages, so property tests fall back to deterministic random example
+sampling: ``@given`` draws ``max_examples`` tuples from a fixed-seed RNG
+and runs the test body once per tuple. Shrinking, assume(), and stateful
+testing are not supported — only the subset this repo uses
+(integers/floats/booleans/lists, @settings(max_examples, deadline)).
+"""
+from __future__ import annotations
+
+
+import random
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class strategies:  # noqa: N801 - mimics the hypothesis.strategies module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(
+            lambda r: [elements.sample(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # No functools.wraps: pytest must see a zero-arg signature, not the
+        # original one (it would mistake generated args for fixtures).
+        def runner():
+            n = getattr(runner, "_max_examples", 20)
+            rnd = random.Random(0xD25D)
+            for _ in range(n):
+                fn(*(s.sample(rnd) for s in strats))
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis; see _hypo_shim
+    from _hypo_shim import given, settings, strategies as st
 
 from repro.core import adaptive
 from repro.core.confidence import boundary_posterior

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis; see _hypo_shim
+    from _hypo_shim import given, settings, strategies as st
 
 from repro.core import confidence as C
 

@@ -1,0 +1,196 @@
+"""Strategy/backend engine API: registry dispatch, typed state, on-device
+generation, and the serving step() wave protocol."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import KNOWN_STRATEGIES, SpecConfig
+from repro.core import pipeline as pl
+from repro.core import strategies as strat_lib
+from repro.core import verify as verify_lib
+from repro.core.drafter import drafter_init
+from repro.core.state import EngineState
+from repro.models import lm
+from repro.serving.engine import ServingEngine
+
+from conftest import tiny_target, tiny_drafter, pure_greedy
+
+GAMMA = 6
+
+
+def _bundle(mode="d2sd", temperature=0.0, third=False, vocab=61):
+    tcfg = tiny_target(vocab=vocab, dtype="float32")
+    dcfg = tiny_drafter(vocab=vocab, gamma=GAMMA, dtype="float32",
+                        causal=(mode == "eagle"), target_cfg=tcfg)
+    tp = lm.lm_init(jax.random.PRNGKey(0), tcfg)
+    d1 = drafter_init(jax.random.PRNGKey(1), dcfg)
+    d2 = drafter_init(jax.random.PRNGKey(2), dcfg)
+    spec = SpecConfig(gamma=GAMMA, top_k_branches=2, mode=mode,
+                      temperature=temperature, third_level=third)
+    return pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp,
+                         d1, d1 if mode == "dflash_second" else d2)
+
+
+# --------------------------------------------------------------- registry --
+def test_registry_has_all_paper_modes():
+    reg = strat_lib.registered_strategies()
+    assert set(KNOWN_STRATEGIES) <= set(reg)
+    for name in KNOWN_STRATEGIES:
+        s = strat_lib.get_strategy(name)
+        assert s.name == name
+        assert s.n_draft_passes(SpecConfig(mode=name)) >= 1
+        assert s.n_tree_nodes(SpecConfig(mode=name)) >= 2
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(KeyError, match="registered"):
+        strat_lib.get_strategy("nope")
+    with pytest.raises(ValueError, match="registered draft strategy"):
+        SpecConfig(mode="nope")
+
+
+@pytest.mark.parametrize("mode", list(KNOWN_STRATEGIES))
+def test_alias_registration_is_token_identical(mode):
+    """Dispatch is purely registry-driven: the same strategy class
+    re-registered under an alias emits token-identical output to the
+    original mode string on a fixed seed."""
+    alias = f"alias_{mode}"
+    cls = strat_lib.registered_strategies()[mode]
+    try:
+        strat_lib.register_strategy(alias)(cls)
+        bundle = _bundle(mode)
+        prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                     bundle.target_cfg.vocab_size)
+        ref = pl.generate(bundle, prompts, max_new=12,
+                          key=jax.random.PRNGKey(7))
+        spec2 = dataclasses.replace(bundle.spec, mode=alias)
+        bundle2 = dataclasses.replace(bundle, spec=spec2)
+        out = pl.generate(bundle2, prompts, max_new=12,
+                          key=jax.random.PRNGKey(7))
+        assert np.array_equal(out["tokens"], ref["tokens"]), mode
+    finally:
+        # restore original class name and drop the alias entry
+        strat_lib._REGISTRY.pop(alias, None)
+        cls.name = mode
+
+
+def test_plugin_strategy_dispatches():
+    """A user-registered strategy is reachable through decode_cycle with no
+    engine change (the one-file-plugin contract)."""
+    from repro.core import tree as tree_lib
+
+    @strat_lib.register_strategy("anchor_echo")
+    class AnchorEcho(strat_lib.DraftStrategy):
+        """Drafts a 1-token chain that just repeats the anchor."""
+
+        def draft(self, bundle, state, key):
+            tree = tree_lib.chain_tree(state.anchor, state.anchor[:, None])
+            return strat_lib.DraftResult(tree=tree, dprobs=None, conf=None,
+                                         max_children=1)
+
+        def n_draft_passes(self, spec):
+            return 0
+
+        def n_tree_nodes(self, spec):
+            return 2
+
+    try:
+        bundle = _bundle("d2sd")
+        spec = dataclasses.replace(bundle.spec, mode="anchor_echo")
+        bundle = dataclasses.replace(bundle, spec=spec)
+        prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                     bundle.target_cfg.vocab_size)
+        ref = np.asarray(pure_greedy(bundle.target_params, bundle.target_cfg,
+                                     prompts, 8))
+        out = pl.generate(bundle, prompts, max_new=8,
+                          key=jax.random.PRNGKey(7))
+        # a useless drafter still yields exact greedy output (verify rule)
+        assert np.array_equal(out["tokens"], ref)
+    finally:
+        strat_lib._REGISTRY.pop("anchor_echo", None)
+
+
+# ------------------------------------------------------- backends / state --
+def test_backend_selection_by_capability():
+    attn = tiny_target(dtype="float32")
+    ssm = tiny_target(dtype="float32", layer_pattern=("rwkv",),
+                      rwkv_head_dim=16)
+    assert isinstance(verify_lib.select_backend(attn),
+                      verify_lib.TreeAttentionVerifier)
+    assert isinstance(verify_lib.select_backend(ssm),
+                      verify_lib.StateReplayVerifier)
+
+
+def test_engine_state_is_pytree():
+    bundle = _bundle("d2sd")
+    state = pl.engine_init(bundle, 2, 32)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    state2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(state2, EngineState)
+    assert state2.batch == 2
+    assert state2.length.shape == (2,)
+
+
+# ------------------------------------------------------- ondevice loop -----
+@pytest.mark.parametrize("mode", ["d2sd", "dflash"])
+def test_generate_ondevice_matches_host_loop(mode):
+    bundle = _bundle(mode)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (3, 8), 0,
+                                 bundle.target_cfg.vocab_size)
+    host = pl.generate(bundle, prompts, max_new=16,
+                       key=jax.random.PRNGKey(7), collect_stats=False)
+    dev = pl.generate_ondevice(bundle, prompts, max_new=16,
+                               key=jax.random.PRNGKey(7))
+    assert np.array_equal(host["tokens"], np.asarray(dev["tokens"])), mode
+    assert host["n_cycles"] == dev["n_cycles"]
+    assert abs(host["alpha"] - dev["alpha"]) < 1e-9
+
+
+def test_generate_ondevice_is_greedy_exact():
+    bundle = _bundle("d2sd")
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                 bundle.target_cfg.vocab_size)
+    ref = np.asarray(pure_greedy(bundle.target_params, bundle.target_cfg,
+                                 prompts, 12))
+    out = pl.generate_ondevice(bundle, prompts, max_new=12,
+                               key=jax.random.PRNGKey(7))
+    assert np.array_equal(np.asarray(out["tokens"]), ref)
+
+
+# ------------------------------------------------------------- serving -----
+def test_submit_uids_stay_unique_across_drained_waves():
+    bundle = _bundle("dflash")
+    eng = ServingEngine(bundle, batch_size=2)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(3), (2, 8), 0, bundle.target_cfg.vocab_size))
+    first = [eng.submit(p, max_new=4) for p in prompts]
+    eng.run()                       # drains the queue into done
+    second = [eng.submit(p, max_new=4) for p in prompts]
+    eng.run()
+    uids = first + second
+    assert len(set(uids)) == len(uids), uids
+    assert sorted(r.uid for r in eng.done) == sorted(uids)
+
+
+def test_wave_step_mixes_max_new_without_reprefill():
+    bundle = _bundle("d2sd")
+    v = bundle.target_cfg.vocab_size
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(3), (3, 8), 0, v))
+    ref = np.asarray(pure_greedy(bundle.target_params, bundle.target_cfg,
+                                 jnp.asarray(prompts), 18))
+    eng = ServingEngine(bundle, batch_size=4)
+    wants = [6, 12, 18]
+    for p, n in zip(prompts, wants):
+        eng.submit(p, max_new=n)
+    stats = eng.run()
+    assert stats["waves"] == 1      # one prefill served all three budgets
+    assert len(eng.done) == 3
+    by_uid = sorted(eng.done, key=lambda r: r.uid)
+    for i, (r, n) in enumerate(zip(by_uid, wants)):
+        assert r.out.shape == (n,)
+        # greedy decode is key-independent: engine == pure target greedy
+        assert np.array_equal(r.out, ref[i, :n]), i

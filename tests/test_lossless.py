@@ -83,6 +83,7 @@ def test_rolling_cache_wraps_correctly():
     assert np.array_equal(out["tokens"], ref)
 
 
+@pytest.mark.slow
 def test_sampling_is_lossless_distribution():
     V = 13
     tcfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
@@ -97,9 +98,9 @@ def test_sampling_is_lossless_distribution():
     prompts = jax.random.randint(jax.random.PRNGKey(3), (1, 6), 0, V)
     spec = SpecConfig(gamma=4, top_k_branches=2, mode="d2sd", temperature=1.0)
     bundle = pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
-    est = pl.engine_init(bundle, 1, 32)
-    est = pl.prefill(bundle, est, prompts)
-    full = jnp.concatenate([prompts, est["anchor"][:, None]], 1)
+    state = pl.engine_init(bundle, 1, 32)
+    state = pl.prefill(bundle, state, prompts)
+    full = jnp.concatenate([prompts, state.anchor[:, None]], 1)
     logits = lm.forward(tp, full, tcfg,
                         remat=False)["logits"][:, -1].astype(jnp.float32)
     p_ref = np.asarray(jax.nn.softmax(logits, -1)[0])
@@ -108,7 +109,7 @@ def test_sampling_is_lossless_distribution():
     n = 1500
     counts = np.zeros(V)
     for i in range(n):
-        _, out = cyc(est, jax.random.PRNGKey(1000 + i))
+        _, out = cyc(state, jax.random.PRNGKey(1000 + i))
         counts[int(np.asarray(out["tokens"][0, 0]))] += 1
     tv = 0.5 * np.abs(counts / n - p_ref).sum()
     noise = float(np.sqrt(V / (4 * n)))
