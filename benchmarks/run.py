@@ -22,13 +22,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--suite", default=None,
+                    help="run a single section by name (alias of --only), "
+                         "e.g. --suite serving -> BENCH_serving.json")
     ap.add_argument("--skip-study", action="store_true",
                     help="only run benches that need no trained artifacts")
     args = ap.parse_args()
+    args.only = args.only or args.suite
 
-    from benchmarks import engine_bench, kernel_bench
+    from benchmarks import engine_bench, kernel_bench, serving_bench
     sections = [("kernels", lambda q: kernel_bench.run(q)),
-                ("engine", lambda q: engine_bench.run(q))]
+                ("engine", lambda q: engine_bench.run(q)),
+                ("serving", lambda q: serving_bench.run(q))]
 
     study_dir = Path(__file__).resolve().parents[1] / "experiments" / "study"
     if not args.skip_study:

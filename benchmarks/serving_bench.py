@@ -1,0 +1,100 @@
+"""Serving micro-benchmark: early-exit masking + slot refill vs legacy
+all-or-nothing waves.
+
+Replays the same mixed traffic (one long budget + sustained short
+requests, mixed prompt lengths) through :class:`ServingEngine` twice —
+once with ``early_exit=False, refill=False`` (the legacy drain-the-wave
+engine) and once with both on — and reports tokens/s plus
+``wasted_row_cycles`` (batch rows that spent a decode cycle without a
+live, unfinished request). Token output is identical across configs
+(greedy decoding, per-row isolation), so the wasted-cycle delta is pure
+batching efficiency. Results land in ``BENCH_serving.json`` at the repo
+root.
+
+Needs no trained study artifacts — builds a tiny random bundle:
+
+    PYTHONPATH=src python -m benchmarks.run --suite serving [--quick]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from benchmarks.engine_bench import _tiny_bundle
+from repro.serving.engine import ServingEngine
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+
+def _traffic(vocab: int, quick: bool):
+    """One long request up front + sustained short/mid traffic."""
+    rng = np.random.default_rng(0)
+    if quick:
+        budgets = [20, 4, 6, 4, 5, 4]
+        plens = [10, 8, 9, 8, 11, 8]
+    else:
+        budgets = [32, 6, 8, 5, 10, 6, 7, 5, 9, 6, 8, 5]
+        plens = [14, 8, 10, 9, 12, 8, 11, 9, 10, 8, 9, 12]
+    return [(rng.integers(3, vocab, size=p).astype(np.int32), n)
+            for p, n in zip(plens, budgets)]
+
+
+def _serve(bundle, reqs, batch: int, early_exit: bool, refill: bool):
+    eng = ServingEngine(bundle, batch_size=batch, seed=0,
+                        early_exit=early_exit, refill=refill)
+    for p, n in reqs:
+        eng.submit(p, max_new=n)
+    t0 = time.time()
+    stats = eng.run()
+    stats["wall_clock_s"] = time.time() - t0
+    outs = {r.uid: r.out.tolist() for r in eng.done}
+    return stats, outs
+
+
+def run(quick: bool = False) -> None:
+    gamma, k = (4, 2) if quick else (6, 2)
+    batch = 2 if quick else 3
+    bundle = _tiny_bundle(gamma, k)
+    reqs = _traffic(bundle.target_cfg.vocab_size, quick)
+
+    base, base_out = _serve(bundle, reqs, batch, early_exit=False,
+                            refill=False)
+    opt, opt_out = _serve(bundle, reqs, batch, early_exit=True, refill=True)
+    tokens_equal = base_out == opt_out
+    assert tokens_equal, "early-exit/refill changed per-request output"
+
+    def row(name, s):
+        print(csv_row(
+            name, s["wall_clock_s"] * 1e6,
+            f"tokens_per_s={s['tokens_per_s']:.1f} "
+            f"wasted_row_cycles={s['wasted_row_cycles']} "
+            f"alpha={s['alpha']:.3f} waves={s['waves']} "
+            f"refills={s['refills']}"))
+
+    row("serving_legacy_waves", base)
+    row("serving_early_exit_refill", opt)
+    saved = base["wasted_row_cycles"] - opt["wasted_row_cycles"]
+    print(csv_row("serving_wasted_cycle_reduction", 0.0,
+                  f"saved={saved} tokens_equal={tokens_equal}"))
+
+    payload = {
+        "config": {"gamma": gamma, "k": k, "batch": batch,
+                   "n_requests": len(reqs), "quick": quick},
+        "legacy_waves": {k2: v for k2, v in base.items()},
+        "early_exit_refill": {k2: v for k2, v in opt.items()},
+        "tokens_equal": tokens_equal,
+        "wasted_row_cycles_saved": saved,
+    }
+    BENCH_PATH.write_text(json.dumps(payload, indent=2, default=float))
+    print(f"wrote {BENCH_PATH}")
+
+
+if __name__ == "__main__":
+    run("--quick" in sys.argv)

@@ -66,21 +66,34 @@ def decode_cycle(bundle: SpecBundle, state: EngineState, key,
                  collect_stats: bool = True):
     """One full speculative decoding cycle.
 
+    Rows with ``state.active == False`` are masked end to end: their draft
+    tree degenerates to the root, the verifier commits zero tokens (no KV
+    or feature-cache writes, length frozen), the anchor is carried over
+    unchanged, and ``n_out`` is 0. The batched draft/verify FLOPs still
+    run for masked rows (static shapes) — the win is that a finished
+    request parks in its slot with zero state mutation, so the slot can
+    be re-prefilled in place and stats stay clean.
+
     Returns (state', out) with out = dict(tokens [B, D+1], n_out [B],
     n_acc [B], plus calibration stats when collect_stats).
     """
     strategy = strat_lib.get_strategy(bundle.spec.mode)
     backend = verify_lib.select_backend(bundle.target_cfg)
     k_draft, k_verify = jax.random.split(key)
+    active = state.active
 
     draft = strategy.draft(bundle, state, k_draft)
+    # inactive rows (finished requests / idle serving slots) degenerate to
+    # a root-only tree: nothing is accepted, nothing is committed below
+    draft = strat_lib.mask_inactive(draft, active)
     vo = backend.verify(bundle, state, draft.tree, draft.dprobs,
                         draft.max_children, k_verify)
     res = vo.res
     tree = draft.tree
 
     # ---------------- feature-cache extension ----------------
-    n_commit = res["n_acc"] + 1
+    n_acc = jnp.where(active, res["n_acc"], 0)
+    n_commit = jnp.where(active, res["n_acc"] + 1, 0)
     fpos = (state.length[:, None]
             + jnp.arange(res["path"].shape[1])[None, :])
     state2 = state.replace(
@@ -91,18 +104,18 @@ def decode_cycle(bundle: SpecBundle, state: EngineState, key,
         d2_feat=dr.extend_feat_cache(
             bundle.d2_params, bundle.d2_cfg, state.d2_feat, vo.path_feats,
             fpos, n_commit),
-        anchor=res["bonus"].astype(jnp.int32))
+        anchor=jnp.where(active, res["bonus"],
+                         state.anchor).astype(jnp.int32))
 
     # ---------------- outputs ----------------
     path_tokens = jnp.take_along_axis(tree.tokens, res["path"], axis=1)
     d_idx = jnp.arange(res["path"].shape[1])[None, :]
-    out_tok = jnp.where(d_idx < res["n_acc"][:, None],
+    out_tok = jnp.where(d_idx < n_acc[:, None],
                         jnp.roll(path_tokens, -1, axis=1), 0)
     # slot d: accepted draft d+1 => path_tokens[d+1]; slot n_acc: bonus
-    out_tok = jnp.where(d_idx == res["n_acc"][:, None],
+    out_tok = jnp.where((d_idx == n_acc[:, None]) & active[:, None],
                         res["bonus"][:, None], out_tok)
-    out = {"tokens": out_tok, "n_out": res["n_acc"] + 1,
-           "n_acc": res["n_acc"]}
+    out = {"tokens": out_tok, "n_out": n_commit, "n_acc": n_acc}
     if collect_stats and draft.conf is not None:
         # calibration: trunk confidences vs trunk-node acceptance (greedy ok)
         g = bundle.spec.gamma
@@ -121,9 +134,15 @@ _cycle_jit = functools.partial(
 
 
 def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
-             max_len: Optional[int] = None, collect_stats: bool = True):
+             max_len: Optional[int] = None, collect_stats: bool = True,
+             early_exit: bool = True):
     """Generate up to ``max_new`` tokens for prompts [B, P] (host loop over
     jitted cycles). Returns dict(tokens [B, max_new], n_cycles, alpha, stats).
+
+    early_exit: mask rows that already reached ``max_new`` so they stop
+    committing tokens / mutating caches (per-example ``EngineState.active``);
+    token output is identical either way — only finished rows' wasted
+    commits (and their dilution of ``alpha``) change.
 
     Back-compat wrapper: use :func:`generate_ondevice` when you do not need
     per-cycle calibration stats — it avoids the per-cycle host sync.
@@ -147,8 +166,13 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
     out_buf[:, 0] = first
     filled = np.ones((b,), np.int64)
     n_cycles = 0
+    act_cycles = 0
     stats = {"n_acc": [], "n_out": [], "conf": [], "trunk_ok": []}
     while filled.min() < max_new:
+        below = filled < max_new
+        act_cycles += int(below.sum()) if early_exit else b
+        if early_exit:
+            state = state.replace(active=jnp.asarray(below))
         key, sub = jax.random.split(key)
         state, out = cycle(state, sub)
         toks = np.asarray(out["tokens"])
@@ -162,24 +186,38 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
         stats["n_acc"].append(np.asarray(out["n_acc"]))
         stats["n_out"].append(n_out)
         if collect_stats and "conf" in out:
-            stats["conf"].append(np.asarray(out["conf"]))
+            # calibration rows only for rows that were still generating:
+            # a masked row's tree is invalidated, so its trunk_ok would be
+            # forced-False against a real conf and skew the curve
+            conf = np.asarray(out["conf"])
+            stats["conf"].append(conf[below] if early_exit else conf)
             if out["trunk_ok"] is not None:
-                stats["trunk_ok"].append(np.asarray(out["trunk_ok"]))
+                tok = np.asarray(out["trunk_ok"])
+                stats["trunk_ok"].append(tok[below] if early_exit else tok)
         if n_cycles > max_new + 8:
             break
-    alpha = (float(np.concatenate(stats["n_out"]).mean())
-             if stats["n_out"] else 0.0)
+    # alpha over rows that were still generating (masked rows commit 0 and
+    # are excluded from the denominator; without early_exit this reduces to
+    # the legacy mean over all row-cycles)
+    alpha = (float(np.concatenate(stats["n_out"]).sum()) / act_cycles
+             if act_cycles else 0.0)
     return {"tokens": out_buf[:, :max_new], "n_cycles": n_cycles,
             "alpha": alpha, "stats": stats}
 
 
-@functools.partial(jax.jit, static_argnames=("max_new", "max_len"))
+@functools.partial(jax.jit,
+                   static_argnames=("max_new", "max_len", "early_exit"))
 def _ondevice_loop(bundle: SpecBundle, prompts, key, max_new: int,
-                   max_len: int):
+                   max_len: int, early_exit: bool = True):
     """Prefill + full decode loop inside one ``lax.while_loop``.
 
-    Returns (buf [B, max_new+g+1], n_cycles [], total_out []) — all on
-    device; the caller slices / casts.
+    With ``early_exit`` the per-example ``EngineState.active`` mask is
+    refreshed from ``filled < max_new`` every iteration: finished rows
+    draft a degenerate root-only tree, commit nothing, and skip every
+    KV / feature-cache write while the ``cond`` stays shape-stable.
+
+    Returns (buf [B, max_new+g+1], n_cycles [], total_out [],
+    act_row_cycles []) — all on device; the caller slices / casts.
     """
     b, _ = prompts.shape
     cap = buf_width = max_new + bundle.spec.gamma + 1
@@ -193,11 +231,16 @@ def _ondevice_loop(bundle: SpecBundle, prompts, key, max_new: int,
     filled = jnp.ones((b,), jnp.int32)
 
     def cond(carry):
-        _, _, filled, _, n_cycles, _ = carry
+        _, _, filled, _, n_cycles, _, _ = carry
         return (filled.min() < max_new) & (n_cycles < cycle_cap)
 
     def body(carry):
-        state, buf, filled, key, n_cycles, total = carry
+        state, buf, filled, key, n_cycles, total, act = carry
+        below = filled < max_new
+        if early_exit:
+            state = state.replace(active=below)
+        act = act + (below.sum(dtype=jnp.int32) if early_exit
+                     else jnp.int32(b))
         key, sub = jax.random.split(key)
         state, out = decode_cycle(bundle, state, sub, collect_stats=False)
         t = out["tokens"].shape[1]
@@ -209,21 +252,27 @@ def _ondevice_loop(bundle: SpecBundle, prompts, key, max_new: int,
         buf = buf.at[bidx, wpos].set(out["tokens"], mode="drop")
         filled = jnp.minimum(filled + out["n_out"], buf_width)
         return (state, buf, filled, key, n_cycles + 1,
-                total + out["n_out"].sum())
+                total + out["n_out"].sum(), act)
 
     carry = (state, buf, filled, key, jnp.zeros((), jnp.int32),
-             jnp.zeros((), jnp.int32))
-    _, buf, _, _, n_cycles, total = jax.lax.while_loop(cond, body, carry)
-    return buf, n_cycles, total
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    _, buf, _, _, n_cycles, total, act = jax.lax.while_loop(cond, body,
+                                                            carry)
+    return buf, n_cycles, total, act
 
 
 def generate_ondevice(bundle: SpecBundle, prompts, max_new: int, key=None,
-                      max_len: Optional[int] = None):
+                      max_len: Optional[int] = None,
+                      early_exit: bool = True):
     """On-device generation: the whole decode loop runs inside a single
     ``jax.lax.while_loop`` with a padded output buffer — zero host syncs
     between cycles. Token-identical to :func:`generate` for the same key
     (same prefill/cycle key schedule, same commit rule); calibration stats
     are not collected on this path.
+
+    early_exit: per-example masking of finished rows inside the loop (see
+    :func:`_ondevice_loop`). Token output is identical with or without it
+    for the same key; ``alpha`` is reported over active row-cycles only.
 
     Returns dict(tokens [B, max_new] device array, n_cycles, alpha).
     """
@@ -231,8 +280,10 @@ def generate_ondevice(bundle: SpecBundle, prompts, max_new: int, key=None,
     g = bundle.spec.gamma
     key = key if key is not None else jax.random.PRNGKey(0)
     max_len = max_len or (p + max_new + 2 * g + 8)
-    buf, n_cycles, total = _ondevice_loop(bundle, prompts, key, max_new,
-                                          max_len)
+    buf, n_cycles, total, act = _ondevice_loop(bundle, prompts, key,
+                                               max_new, max_len,
+                                               early_exit=early_exit)
     n = int(n_cycles)
-    alpha = float(total) / (n * b) if n else 0.0
+    act = int(act)
+    alpha = float(total) / act if act else 0.0
     return {"tokens": buf[:, :max_new], "n_cycles": n, "alpha": alpha}

@@ -32,11 +32,17 @@ class EngineState:
     d1_feat: first-drafter feature cache (``drafter.init_feat_cache``).
     d2_feat: second-drafter feature cache.
     anchor:  [B] int32 — the bonus token that roots the next draft block.
+    active:  [B] bool — rows still generating. Inactive rows draft a
+             degenerate root-only tree, commit zero tokens, and skip every
+             KV / feature-cache write, so a finished (or idle) row costs
+             no state mutation inside the decode loop and its slot can be
+             re-prefilled in place via :meth:`adopt_row`.
     """
     target: Dict[str, Any]
     d1_feat: Dict[str, Any]
     d2_feat: Dict[str, Any]
     anchor: jnp.ndarray
+    active: jnp.ndarray
 
     @property
     def length(self) -> jnp.ndarray:
@@ -47,15 +53,61 @@ class EngineState:
     def batch(self) -> int:
         return self.anchor.shape[0]
 
+    @property
+    def max_len(self) -> int:
+        """Static cache capacity this state was allocated with."""
+        return self.d1_feat["k"].shape[2]
+
     def replace(self, **kw) -> "EngineState":
         return dataclasses.replace(self, **kw)
+
+    def adopt_row(self, row, other: "EngineState",
+                  src_row: int = 0) -> "EngineState":
+        """Splice ``other``'s ``src_row`` into this state's ``row``.
+
+        This is the slot-refill primitive: a retired request's row is
+        overwritten with a freshly prefilled single-request state (same
+        ``max_len``), leaving every other row untouched. ``row`` may be a
+        traced index; ``other`` is typically batch-1.
+        """
+        # feature caches: "length" is batch-leading, k/v are [L, B, T, H, D]
+        f_ax = lambda name: 0 if name == "length" else 1      # noqa: E731
+        return EngineState(
+            target=_adopt_dict(self.target, other.target, row, src_row,
+                               lm.state_batch_axis),
+            d1_feat=_adopt_dict(self.d1_feat, other.d1_feat, row, src_row,
+                                f_ax),
+            d2_feat=_adopt_dict(self.d2_feat, other.d2_feat, row, src_row,
+                                f_ax),
+            anchor=_splice_row(self.anchor, other.anchor, row, src_row, 0),
+            active=_splice_row(self.active, other.active, row, src_row, 0),
+        )
 
 
 jax.tree_util.register_pytree_node(
     EngineState,
-    lambda s: ((s.target, s.d1_feat, s.d2_feat, s.anchor), None),
+    lambda s: ((s.target, s.d1_feat, s.d2_feat, s.anchor, s.active), None),
     lambda _, ch: EngineState(*ch),
 )
+
+
+def _splice_row(dst, src, row, src_row, axis):
+    """Write src[..., src_row, ...] into dst at ``row`` along ``axis``."""
+    if not hasattr(dst, "ndim") or dst.ndim == 0:
+        return dst
+    sl = jax.lax.index_in_dim(src, src_row, axis, keepdims=False)
+    return jax.lax.dynamic_update_index_in_dim(
+        dst, sl.astype(dst.dtype), row, axis)
+
+
+def _adopt_dict(dst, src, row, src_row, axis_for):
+    out = {}
+    for name, v in dst.items():
+        ax = axis_for(name)
+        out[name] = jax.tree.map(
+            lambda d, s, a=ax: _splice_row(d, s, row, src_row, a),
+            v, src[name])
+    return out
 
 
 def engine_init(bundle, batch: int, max_len: int,
@@ -71,6 +123,7 @@ def engine_init(bundle, batch: int, max_len: int,
         d2_feat=dr.init_feat_cache(bundle.d2_cfg, batch, max_len,
                                    dtype=jnp.dtype(bundle.d2_cfg.dtype)),
         anchor=jnp.zeros((batch,), jnp.int32),
+        active=jnp.ones((batch,), bool),
     )
 
 
@@ -102,3 +155,20 @@ def prefill(bundle, state: EngineState, prompts, key=None, ctx=None,
     return state.replace(target=out["states"], d1_feat=d1_feat,
                          d2_feat=d2_feat,
                          anchor=anchor.astype(jnp.int32))
+
+
+def prefill_row(bundle, state: EngineState, row, prompt, key=None, ctx=None,
+                temperature: float = 0.0, ctx_len: int = 0) -> EngineState:
+    """Prefill a single request into one row of an in-flight state.
+
+    Allocates a batch-1 state with the same ``max_len``, runs the normal
+    prefill over ``prompt`` [P], and splices the result into ``row`` via
+    :meth:`EngineState.adopt_row`. Other rows' caches, lengths, and anchors
+    are untouched, so a serving engine can retire a finished request and
+    re-use its slot without re-prefilling the rest of the wave.
+    """
+    prompt = jnp.asarray(prompt, jnp.int32)
+    sub = engine_init(bundle, 1, state.max_len, ctx_len=ctx_len)
+    sub = prefill(bundle, sub, prompt[None, :], key=key, ctx=ctx,
+                  temperature=temperature)
+    return state.adopt_row(row, sub)

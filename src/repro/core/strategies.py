@@ -93,6 +93,24 @@ def registered_strategies() -> Dict[str, Type[DraftStrategy]]:
     return dict(_REGISTRY)
 
 
+def mask_inactive(result: DraftResult, active) -> DraftResult:
+    """Degenerate inactive rows' candidate trees to the root-only node.
+
+    active: [B] bool. For rows with ``active=False`` every non-root node is
+    invalidated (token zeroed, valid=False), so verification accepts
+    nothing, the best path stays at the anchor, and the commit for that
+    row is fully masked upstream (``decode_cycle`` zeroes ``n_out`` and
+    keeps the anchor). Shape-stable: the node table keeps its static size,
+    which is what lets the mask cross ``jit`` / ``while_loop`` boundaries.
+    """
+    t = result.tree
+    keep = active[:, None] | (jnp.arange(t.n) == 0)[None, :]
+    tree = tree_lib.Tree(tokens=jnp.where(keep, t.tokens, 0),
+                         parent=t.parent, depth=t.depth,
+                         valid=t.valid & keep, max_depth=t.max_depth)
+    return dataclasses.replace(result, tree=tree)
+
+
 # ----------------------------------------------------- shared draft steps --
 def first_draft(bundle, state: EngineState, key, temperature):
     """DFlash pass: returns (trunk [B,g-1], d1_logits [B,g,V])."""

@@ -187,8 +187,9 @@ class TreeAttentionVerifier(VerifierBackend):
                                   temperature=temp)
         else:
             res = greedy_verify(tree, logits)
-        # commit KV by gathering the accepted path from the verify pass
-        n_commit = res["n_acc"] + 1
+        # commit KV by gathering the accepted path from the verify pass;
+        # inactive rows commit nothing (length frozen, no cache writes)
+        n_commit = jnp.where(state.active, res["n_acc"] + 1, 0)
         new_target = lm.commit_kv(state.target, vout["kv_outs"], tcfg,
                                   res["path"], n_commit)
         path_feats = jnp.take_along_axis(
@@ -229,8 +230,7 @@ class StateReplayVerifier(VerifierBackend):
         def rep(key_name, a):
             if not hasattr(a, "ndim") or a.ndim == 0:
                 return a
-            axis = 1 if key_name.startswith("p") else 0        # stacked periods
-            return jnp.repeat(a, r, axis=axis)
+            return jnp.repeat(a, r, axis=lm.state_batch_axis(key_name))
 
         states_rep = {k2: (jax.tree.map(lambda a: rep(k2, a), v)
                            if isinstance(v, dict) else rep(k2, v))
@@ -257,8 +257,9 @@ class StateReplayVerifier(VerifierBackend):
             best_row[:, None, None].repeat(g, 2), axis=1)[:, 0]  # [B,g]
         bonus = jnp.take_along_axis(pred_best, n_acc[:, None], axis=1)[:, 0]
 
-        # replay accepted path to advance states by exactly n_commit
-        n_commit = n_acc + 1
+        # replay accepted path to advance states by exactly n_commit;
+        # inactive rows snap at 0: recurrent states and lengths stay frozen
+        n_commit = jnp.where(state.active, n_acc + 1, 0)
         path_tokens = jnp.take_along_axis(tree.tokens, path, axis=1)  # [B,g]
         rout = lm.forward(bundle.target_params, path_tokens, tcfg,
                           states=state.target, write_kv=True,

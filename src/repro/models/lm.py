@@ -63,6 +63,15 @@ def init_states(cfg: ModelConfig, batch: int, max_len: int, ctx_len: int = 0,
     return states
 
 
+def state_batch_axis(key: str) -> int:
+    """Batch axis of a target-state leaf, by its dict key in the layout
+    :func:`init_states` builds: stacked-period entries ("p0", "p1", ...)
+    carry [n_periods, B, ...]; everything else ("tailN", "length") is
+    batch-leading. Single source of truth for code that indexes or
+    repeats state rows (EngineState.adopt_row, StateReplayVerifier)."""
+    return 1 if key.startswith("p") else 0
+
+
 # --------------------------------------------------------------- forward ---
 def forward(params, tokens, cfg: ModelConfig, *, states=None, cache_len=None,
             positions=None, write_kv: bool = False, extra_mask=None,

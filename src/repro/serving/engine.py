@@ -1,13 +1,30 @@
-"""Batched D2SD serving engine.
+"""Batched D2SD serving engine: continuous slot-refill batching.
 
-Wave-based continuous batching over the typed decode-engine API: requests
-queue up, waves of ``batch_size`` uniform-prompt-length requests prefill
-once into one :class:`~repro.core.state.EngineState` and then advance via
-the per-cycle :meth:`ServingEngine.step` API. Because ``step`` owns one
-decode cycle (not a whole ``generate`` call), a wave can mix requests with
-different ``max_new`` without re-prefilling: finished requests simply stop
-accumulating tokens and the wave retires when the last one is done.
-Tracks per-request and aggregate acceptance/latency statistics.
+Requests queue up and are served FIFO through a fixed-size batch of row
+*slots* over one typed :class:`~repro.core.state.EngineState`:
+
+* **Per-slot prefill** — each request is prefilled independently into its
+  row via :func:`~repro.core.state.prefill_row` (a batch-1 prefill spliced
+  in with :meth:`EngineState.adopt_row`), so one running batch mixes
+  arbitrary prompt lengths AND arbitrary ``max_new`` budgets; there are no
+  uniform-prompt-length waves.
+* **Early-exit masking** — before every decode cycle the engine pushes a
+  per-row ``active`` mask into the state; rows whose request already hit
+  its budget (or whose slot is idle) draft a degenerate root-only tree and
+  commit nothing, so they stop mutating KV / feature caches and stop
+  polluting acceptance statistics (disable with ``early_exit=False``).
+* **Slot refill** — the moment a request finishes, it retires into
+  ``done`` and the FIFO head of the queue is prefilled into the vacated
+  row, keeping the batch full under sustained traffic (disable with
+  ``refill=False`` to get drain-the-wave batching for A/B comparison; see
+  ``benchmarks/serving_bench.py``).
+
+The per-cycle :meth:`ServingEngine.step` API owns ONE decode cycle, so the
+host loop can interleave submissions, refills, and stats collection.
+Aggregate stats track tokens actually committed per request
+(``min(filled, max_new)``), acceptance ``alpha`` over *active* row-cycles
+only, and ``wasted_row_cycles`` — cycles a batch row spent without a live,
+unfinished request (the quantity early-exit + refill minimizes).
 """
 from __future__ import annotations
 
@@ -16,10 +33,11 @@ import time
 from typing import Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pipeline as pl
-from repro.core.state import EngineState
+from repro.core.state import EngineState, prefill_row
 
 
 @dataclasses.dataclass
@@ -30,29 +48,33 @@ class Request:
     out: Optional[np.ndarray] = None
     n_cycles: int = 0
     latency_s: float = 0.0
+    t_start: float = 0.0
 
 
 @dataclasses.dataclass
 class Wave:
-    """One in-flight batch: typed engine state + per-request output books."""
-    requests: List[Request]
+    """One running batch: typed engine state + per-slot request books."""
+    requests: List[Optional[Request]]   # slot -> live request (None = idle)
     state: EngineState
     bufs: np.ndarray            # [B, cap] committed tokens (slot 0 = anchor)
     filled: np.ndarray          # [B] tokens committed so far
-    targets: np.ndarray         # [B] per-request max_new
+    targets: np.ndarray         # [B] per-request max_new (0 for idle slots)
     t0: float
     cycles: int = 0
 
     @property
     def done(self) -> bool:
-        return bool((self.filled >= self.targets).all())
+        return all(r is None for r in self.requests)
 
 
 class ServingEngine:
     def __init__(self, bundle: pl.SpecBundle, batch_size: int = 8,
-                 seed: int = 0):
+                 seed: int = 0, early_exit: bool = True,
+                 refill: bool = True):
         self.bundle = bundle
         self.batch_size = batch_size
+        self.early_exit = early_exit
+        self.refill = refill
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
@@ -62,7 +84,8 @@ class ServingEngine:
         self._cycle = lambda s, k: pl._cycle_jit(self.bundle, s, k,
                                                  collect_stats=False)
         self.stats = {"tokens": 0, "cycles": 0, "accepted": 0,
-                      "wall_s": 0.0, "waves": 0, "alpha": 0.0}
+                      "wall_s": 0.0, "waves": 0, "alpha": 0.0,
+                      "wasted_row_cycles": 0, "refills": 0}
         self._alpha_num = 0
         self._alpha_den = 0
 
@@ -76,78 +99,162 @@ class ServingEngine:
         return uid
 
     def _next_wave(self) -> List[Request]:
-        if not self.queue:
-            return []
-        # group by prompt length (uniform-length waves)
-        self.queue.sort(key=lambda r: len(r.prompt))
-        plen = len(self.queue[0].prompt)
-        wave = [r for r in self.queue if len(r.prompt) == plen]
-        wave = wave[: self.batch_size]
-        for r in wave:
-            self.queue.remove(r)
-        return wave
+        # FIFO: the wave anchors on the oldest queued request. (Re-sorting
+        # by prompt length let sustained short-prompt traffic starve an
+        # early long-prompt request forever; per-slot prefill removed the
+        # uniform-length constraint that motivated the sort.)
+        take = self.queue[: self.batch_size]
+        self.queue = self.queue[len(take):]
+        return take
 
     # ------------------------------------------------------ step API ------
     def start_wave(self) -> bool:
-        """Prefill the next wave of requests. Returns False if queue empty."""
+        """Allocate + prefill the next running batch. False if queue empty."""
         assert self.wave is None, "finish the active wave first"
         reqs = self._next_wave()
         if not reqs:
             return False
-        prompts = np.stack([r.prompt for r in reqs])
-        b, p = prompts.shape
+        b = len(reqs)
         g = self.bundle.spec.gamma
-        targets = np.array([r.max_new for r in reqs], np.int64)
-        cap = int(targets.max()) + g + 1
-        max_len = p + cap + 2 * g + 8
+        # size caches for the wave plus the next batch of likely refill
+        # candidates — not the whole queue, or one huge queued request
+        # would inflate every slot's KV/feature allocation; requests that
+        # don't fit simply wait for the next wave (see _fits)
+        cand = reqs + self.queue[: self.batch_size]
+        cap = max(self._bufs_needed(r, g) for r in cand)
+        max_len = max(self._cache_needed(r, g) for r in cand)
         state = pl.engine_init(self.bundle, b, max_len)
-        self.key, sub = jax.random.split(self.key)
-        state = pl.prefill(self.bundle, state, prompts, key=sub,
-                           temperature=self.bundle.spec.temperature)
-        bufs = np.zeros((b, cap), np.int32)
-        bufs[:, 0] = np.asarray(state.anchor)
-        self.wave = Wave(requests=reqs, state=state, bufs=bufs,
-                         filled=np.ones((b,), np.int64), targets=targets,
+        state = state.replace(active=jnp.zeros((b,), bool))
+        self.wave = Wave(requests=[None] * b, state=state,
+                         bufs=np.zeros((b, cap), np.int32),
+                         filled=np.zeros((b,), np.int64),
+                         targets=np.zeros((b,), np.int64),
                          t0=time.time())
+        for i, r in enumerate(reqs):
+            self._install(i, r)
+            if self.wave.filled[i] >= self.wave.targets[i]:
+                # satisfied by the prefill alone (max_new <= 1): retire
+                # (and possibly refill) without paying a decode cycle
+                self._retire(i)
+        if self.wave.done:
+            self._finish_wave()
         return True
 
-    def step(self) -> bool:
-        """Run ONE decode cycle for the active wave and bank its tokens.
+    def _install(self, slot: int, r: Request) -> None:
+        """Prefill ``r`` into ``slot`` of the running batch (slot refill)."""
+        w = self.wave
+        self.key, sub = jax.random.split(self.key)
+        w.state = prefill_row(self.bundle, w.state, slot, r.prompt, key=sub,
+                              temperature=self.bundle.spec.temperature)
+        w.bufs[slot] = 0
+        w.bufs[slot, 0] = int(np.asarray(w.state.anchor)[slot])
+        w.filled[slot] = 1
+        w.targets[slot] = r.max_new
+        w.requests[slot] = r
+        r.t_start = time.time()
+        r.n_cycles = 0
 
-        Returns True while the wave still has unfinished requests; on the
-        cycle that finishes the last request the wave retires into ``done``
-        and False is returned.
+    # ---- sizing: single source of truth for allocation and admission ----
+    @staticmethod
+    def _bufs_needed(r: Request, g: int) -> int:
+        """Output-buffer slots: budget + worst-case overshoot + anchor."""
+        return r.max_new + g + 1
+
+    @staticmethod
+    def _cache_needed(r: Request, g: int) -> int:
+        """KV/feature-cache positions: prompt + budget + draft headroom
+        (the same sizing rule as ``generate``'s default max_len)."""
+        return len(r.prompt) + r.max_new + 2 * g + 8
+
+    def _fits(self, r: Request) -> bool:
+        """Can ``r`` be adopted into the current wave's allocation?"""
+        w = self.wave
+        g = self.bundle.spec.gamma
+        return (self._bufs_needed(r, g) <= w.bufs.shape[1]
+                and self._cache_needed(r, g) <= w.state.max_len)
+
+    def _host_active(self) -> np.ndarray:
+        """[B] rows holding a request that still wants tokens."""
+        w = self.wave
+        return np.array([r is not None and w.filled[i] < w.targets[i]
+                         for i, r in enumerate(w.requests)])
+
+    def step(self) -> bool:
+        """Run ONE decode cycle for the running batch and bank its tokens.
+
+        Finished requests retire immediately and (with ``refill``) their
+        slot adopts the FIFO head of the queue via a per-slot prefill.
+        Returns True while any slot still has an unfinished request;
+        False once the wave has closed — including the case where
+        ``start_wave`` already finished it outright (a burst of
+        ``max_new <= 1`` requests satisfied by their prefills).
         """
         w = self.wave
-        assert w is not None, "no active wave — call start_wave()"
+        if w is None:
+            return False
+        b = len(w.requests)
+        active = self._host_active()
+        # push the mask: with early_exit, finished/idle rows cost nothing
+        # and commit nothing; without it they keep running full cycles
+        # (legacy behavior, kept for A/B benchmarking)
+        w.state = w.state.replace(
+            active=jnp.asarray(active) if self.early_exit
+            else jnp.ones((b,), bool))
         self.key, sub = jax.random.split(self.key)
         w.state, out = self._cycle(w.state, sub)
         toks = np.asarray(out["tokens"])
         n_out = np.asarray(out["n_out"])
         cap = w.bufs.shape[1]
-        for i in range(len(w.requests)):
-            m = min(int(n_out[i]), cap - int(w.filled[i]))
-            if m > 0:
-                w.bufs[i, w.filled[i]: w.filled[i] + m] = toks[i, :m]
-        w.filled = np.minimum(w.filled + n_out, cap)
         w.cycles += 1
-        self._alpha_num += int(n_out.sum())
-        self._alpha_den += len(w.requests)
-        if w.done or w.cycles > int(w.targets.max()) + 8:
+        # stats: only rows that were actively serving a request count
+        # toward acceptance; the rest are wasted batch capacity
+        self.stats["wasted_row_cycles"] += int(b - active.sum())
+        self._alpha_num += int(n_out[active].sum())
+        self._alpha_den += int(active.sum())
+        self.stats["accepted"] += int(np.maximum(n_out[active] - 1, 0).sum())
+        for i in range(b):
+            r = w.requests[i]
+            if r is None:
+                continue
+            if active[i]:
+                m = min(int(n_out[i]), cap - int(w.filled[i]))
+                if m > 0:
+                    w.bufs[i, w.filled[i]: w.filled[i] + m] = toks[i, :m]
+                w.filled[i] = min(w.filled[i] + int(n_out[i]), cap)
+                r.n_cycles += 1
+            if w.filled[i] >= w.targets[i] or r.n_cycles > r.max_new + 8:
+                self._retire(i)
+        if w.done:
             self._finish_wave()
             return False
         return True
 
+    def _retire(self, slot: int) -> None:
+        w = self.wave
+        while True:
+            r = w.requests[slot]
+            r.out = w.bufs[slot, : r.max_new].copy()
+            r.latency_s = time.time() - r.t_start
+            self.done.append(r)
+            # count tokens actually committed: a cycle-cap bailout can
+            # retire a request with filled < max_new, which must not
+            # inflate tokens_per_s
+            self.stats["tokens"] += int(min(w.filled[slot], r.max_new))
+            w.requests[slot] = None
+            w.targets[slot] = 0
+            if not (self.refill and self.queue
+                    and self._fits(self.queue[0])):
+                return
+            self._install(slot, self.queue.pop(0))
+            self.stats["refills"] += 1
+            if w.filled[slot] < w.targets[slot]:
+                return
+            # adopted request was satisfied by its prefill alone
+            # (max_new <= 1): keep draining the queue into this slot
+
     def _finish_wave(self) -> None:
         w = self.wave
         dt = time.time() - w.t0
-        for i, r in enumerate(w.requests):
-            r.out = w.bufs[i, : r.max_new]
-            r.n_cycles = w.cycles
-            r.latency_s = dt
-            self.done.append(r)
-        self.stats["tokens"] += int(sum(min(r.max_new, w.bufs.shape[1])
-                                        for r in w.requests))
         self.stats["cycles"] += w.cycles * len(w.requests)
         self.stats["wall_s"] += dt
         self.stats["waves"] += 1
@@ -160,7 +267,8 @@ class ServingEngine:
         while self.queue or self.wave is not None:
             if self.wave is None and not self.start_wave():
                 break
-            while self.step():
+            # start_wave can finish a wave outright (all-max_new<=1 burst)
+            while self.wave is not None and self.step():
                 pass
         s = dict(self.stats)
         s["tokens_per_s"] = (s["tokens"] / s["wall_s"]

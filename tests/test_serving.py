@@ -1,0 +1,304 @@
+"""ServingEngine: early-exit masking, continuous slot refill, FIFO waves,
+and the alpha / tokens accounting fixes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import SpecConfig
+from repro.core import pipeline as pl
+from repro.core.drafter import drafter_init
+from repro.core.state import prefill_row
+from repro.models import lm
+from repro.serving.engine import ServingEngine
+
+from conftest import tiny_target, tiny_drafter, pure_greedy
+
+GAMMA = 6
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    tcfg = tiny_target(vocab=61, dtype="float32")
+    dcfg = tiny_drafter(vocab=61, gamma=GAMMA, dtype="float32",
+                        target_cfg=tcfg)
+    tp = lm.lm_init(jax.random.PRNGKey(0), tcfg)
+    d1 = drafter_init(jax.random.PRNGKey(1), dcfg)
+    d2 = drafter_init(jax.random.PRNGKey(2), dcfg)
+    spec = SpecConfig(gamma=GAMMA, top_k_branches=2, mode="d2sd")
+    return pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
+
+
+def _ref(bundle, prompt, n):
+    return np.asarray(pure_greedy(bundle.target_params, bundle.target_cfg,
+                                  jnp.asarray(prompt)[None], n))[0]
+
+
+def _mixed_requests(vocab, seed=0):
+    """Mixed prompt lengths AND budgets — impossible for the old
+    uniform-length wave engine to serve in one allocation."""
+    rng = np.random.default_rng(seed)
+    plens = (8, 11, 8, 9, 10)
+    wants = (6, 14, 9, 5, 11)
+    prompts = [rng.integers(0, vocab, size=p).astype(np.int32)
+               for p in plens]
+    return prompts, wants
+
+
+# ------------------------------------------------------------ tentpole -----
+def test_mixed_budget_refill_parity_vs_generate(bundle):
+    """Per-request outputs through refill batching == standalone greedy
+    decoding of each request (token identity, acceptance criterion #1)."""
+    prompts, wants = _mixed_requests(bundle.target_cfg.vocab_size)
+    eng = ServingEngine(bundle, batch_size=2)
+    for p, n in zip(prompts, wants):
+        eng.submit(p, max_new=n)
+    stats = eng.run()
+    assert stats["waves"] == 1          # refill kept one allocation busy
+    assert stats["refills"] == len(prompts) - 2
+    assert len(eng.done) == len(prompts)
+    for r in sorted(eng.done, key=lambda r: r.uid):
+        assert r.out.shape == (r.max_new,)
+        assert np.array_equal(r.out, _ref(bundle, prompts[r.uid],
+                                          r.max_new)), r.uid
+    # engine-level parity with the host generate() loop on one request
+    g = pl.generate(bundle, jnp.asarray(prompts[0])[None],
+                    max_new=wants[0], key=jax.random.PRNGKey(5))
+    assert np.array_equal(np.asarray(g["tokens"])[0],
+                          sorted(eng.done, key=lambda r: r.uid)[0].out)
+
+
+def test_refill_preserves_other_rows(bundle):
+    """Adopting a new request into a retired slot must not perturb the
+    still-running rows' outputs (slot isolation)."""
+    v = bundle.target_cfg.vocab_size
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, v, size=8).astype(np.int32) for _ in range(3)]
+    wants = [18, 4, 4]                  # row 1 retires early, uid 2 adopts it
+    eng = ServingEngine(bundle, batch_size=2)
+    for p, n in zip(prompts, wants):
+        eng.submit(p, max_new=n)
+    stats = eng.run()
+    assert stats["waves"] == 1 and stats["refills"] == 1
+    for r in eng.done:
+        assert np.array_equal(r.out, _ref(bundle, prompts[r.uid],
+                                          r.max_new)), r.uid
+
+
+def test_early_exit_and_refill_reduce_wasted_row_cycles(bundle):
+    """Same traffic, same outputs — strictly fewer wasted row-cycles with
+    early-exit + refill than with legacy all-or-nothing waves."""
+    # one long request + sustained short traffic: the legacy wave pairs the
+    # long budget with a short one and idles, refill keeps the short slot fed
+    rng = np.random.default_rng(1)
+    v = bundle.target_cfg.vocab_size
+    wants = [20, 4, 4, 4, 4, 4]
+    prompts = [rng.integers(0, v, size=p).astype(np.int32)
+               for p in (10, 8, 9, 8, 11, 8)]
+
+    def serve(early_exit, refill):
+        eng = ServingEngine(bundle, batch_size=2, early_exit=early_exit,
+                            refill=refill)
+        for p, n in zip(prompts, wants):
+            eng.submit(p, max_new=n)
+        return eng, eng.run()
+
+    eng_new, s_new = serve(True, True)
+    eng_old, s_old = serve(False, False)
+    by_uid = lambda e: sorted(e.done, key=lambda r: r.uid)  # noqa: E731
+    for a, b in zip(by_uid(eng_new), by_uid(eng_old)):
+        assert np.array_equal(a.out, b.out), a.uid
+    assert s_new["tokens"] == s_old["tokens"]       # equal token output
+    assert s_new["wasted_row_cycles"] < s_old["wasted_row_cycles"]
+
+
+# ------------------------------------------------- satellite: stats fixes --
+def test_alpha_and_token_stats_match_hand_computed(bundle):
+    """alpha must be recomputable from the per-cycle (active, n_out) log:
+    finished rows must not count in the denominator, and tokens must count
+    what was actually committed per request."""
+    prompts, wants = _mixed_requests(bundle.target_cfg.vocab_size, seed=2)
+    eng = ServingEngine(bundle, batch_size=2)
+    log = []
+    orig = eng._cycle
+
+    def recording_cycle(s, k):
+        s2, out = orig(s, k)
+        log.append((np.asarray(s.active).copy(),
+                    np.asarray(out["n_out"]).copy()))
+        return s2, out
+
+    eng._cycle = recording_cycle
+    for p, n in zip(prompts, wants):
+        eng.submit(p, max_new=n)
+    stats = eng.run()
+
+    num = sum(int(n_out[act].sum()) for act, n_out in log)
+    den = sum(int(act.sum()) for act, n_out in log)
+    assert den < sum(len(a) for a, _ in log)    # some rows were masked
+    assert stats["alpha"] == pytest.approx(num / den)
+    # every request finished normally => committed exactly its budget
+    assert stats["tokens"] == sum(wants)
+    # masked rows commit nothing, so the active-row sum is the total sum
+    assert num == sum(int(n_out.sum()) for _, n_out in log)
+
+
+def test_finished_rows_commit_nothing(bundle):
+    """Regression for the accounting bugs: a finished row's n_out is 0 with
+    early-exit on, so neither alpha nor the output buffers move."""
+    v = bundle.target_cfg.vocab_size
+    rng = np.random.default_rng(5)
+    eng = ServingEngine(bundle, batch_size=2, refill=False)
+    eng.submit(rng.integers(0, v, size=8).astype(np.int32), max_new=4)
+    eng.submit(rng.integers(0, v, size=8).astype(np.int32), max_new=20)
+    seen = []
+    orig = eng._cycle
+
+    def recording_cycle(s, k):
+        s2, out = orig(s, k)
+        seen.append((np.asarray(s.active).copy(),
+                     np.asarray(out["n_out"]).copy()))
+        return s2, out
+
+    eng._cycle = recording_cycle
+    eng.run()
+    masked = [(a, n) for a, n in seen if not a.all()]
+    assert masked, "short request never went inactive"
+    for act, n_out in masked:
+        assert (n_out[~act] == 0).all()
+
+
+def test_max_new_one_burst_needs_no_decode_cycles(bundle):
+    """Requests satisfied by the prefill alone (max_new <= 1) retire and
+    refill without paying a decode cycle."""
+    v = bundle.target_cfg.vocab_size
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, v, size=8).astype(np.int32)
+               for _ in range(4)]
+    eng = ServingEngine(bundle, batch_size=2)
+    for p in prompts:
+        eng.submit(p, max_new=1)
+    stats = eng.run()
+    assert len(eng.done) == 4
+    assert stats["cycles"] == 0 and stats["wasted_row_cycles"] == 0
+    assert stats["tokens"] == 4
+    for r in eng.done:
+        assert np.array_equal(r.out, _ref(bundle, prompts[r.uid], 1)), r.uid
+
+
+# ------------------------------------------------- satellite: FIFO waves ---
+def test_fifo_no_starvation_by_prompt_length(bundle):
+    """A long-prompt request submitted first must be served first even when
+    shorter prompts keep arriving (the old length-sort starved it)."""
+    v = bundle.target_cfg.vocab_size
+    rng = np.random.default_rng(7)
+    eng = ServingEngine(bundle, batch_size=1)
+    long_uid = eng.submit(rng.integers(0, v, size=16).astype(np.int32),
+                          max_new=4)
+    for _ in range(3):
+        eng.submit(rng.integers(0, v, size=6).astype(np.int32), max_new=4)
+    eng.run()
+    assert eng.done[0].uid == long_uid
+    # and overall completion order is FIFO for equal budgets
+    assert [r.uid for r in eng.done] == sorted(r.uid for r in eng.done)
+
+
+# ------------------------------------ satellite: on-device early exit ------
+def test_ondevice_early_exit_token_identity(bundle):
+    """generate_ondevice with and without per-example masking is
+    token-identical (and cycle-identical) for the same key."""
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (3, 8), 0,
+                                 bundle.target_cfg.vocab_size)
+    on = pl.generate_ondevice(bundle, prompts, max_new=16,
+                              key=jax.random.PRNGKey(7), early_exit=True)
+    off = pl.generate_ondevice(bundle, prompts, max_new=16,
+                               key=jax.random.PRNGKey(7), early_exit=False)
+    assert np.array_equal(np.asarray(on["tokens"]),
+                          np.asarray(off["tokens"]))
+    assert on["n_cycles"] == off["n_cycles"]
+
+
+def test_ondevice_early_exit_freezes_finished_rows(bundle):
+    """With mixed effective budgets the masked rows' state stops advancing:
+    host-loop masking and the on-device while_loop agree on alpha too."""
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (3, 8), 0,
+                                 bundle.target_cfg.vocab_size)
+    host = pl.generate(bundle, prompts, max_new=16,
+                       key=jax.random.PRNGKey(9), collect_stats=False,
+                       early_exit=True)
+    dev = pl.generate_ondevice(bundle, prompts, max_new=16,
+                               key=jax.random.PRNGKey(9), early_exit=True)
+    assert np.array_equal(host["tokens"], np.asarray(dev["tokens"]))
+    assert host["n_cycles"] == dev["n_cycles"]
+    assert host["alpha"] == pytest.approx(dev["alpha"])
+
+
+# ----------------------------------------------- state-level primitives ----
+def test_prefill_row_adopts_without_touching_neighbors(bundle):
+    """adopt_row/prefill_row splice exactly one row of every cache."""
+    v = bundle.target_cfg.vocab_size
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (3, 8), 0, v)
+    state = pl.engine_init(bundle, 3, 64)
+    state = pl.prefill(bundle, state, prompts)
+    newp = jax.random.randint(jax.random.PRNGKey(8), (12,), 0, v)
+    st2 = prefill_row(bundle, state, 1, newp, key=jax.random.PRNGKey(11))
+    assert int(st2.length[1]) == 12
+    assert [int(st2.length[i]) for i in (0, 2)] == \
+        [int(state.length[i]) for i in (0, 2)]
+    assert np.array_equal(np.asarray(st2.anchor)[[0, 2]],
+                          np.asarray(state.anchor)[[0, 2]])
+    # the adopted row's anchor equals a standalone prefill's first token
+    ref = _ref(bundle, newp, 1)
+    assert int(st2.anchor[1]) == int(ref[0])
+    # feature caches spliced row-wise
+    for feat, old in ((st2.d1_feat, state.d1_feat),
+                      (st2.d2_feat, state.d2_feat)):
+        assert np.array_equal(np.asarray(feat["k"][:, 0]),
+                              np.asarray(old["k"][:, 0]))
+        assert not np.array_equal(np.asarray(feat["k"][:, 1]),
+                                  np.asarray(old["k"][:, 1]))
+
+
+def test_decode_cycle_inactive_row_is_frozen(bundle):
+    """A masked row keeps length, anchor, and caches bit-identical through
+    a decode cycle while active rows advance."""
+    v = bundle.target_cfg.vocab_size
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, v)
+    state = pl.engine_init(bundle, 2, 64)
+    state = pl.prefill(bundle, state, prompts)
+    state = state.replace(active=jnp.asarray([True, False]))
+    state2, out = pl.decode_cycle(bundle, state, jax.random.PRNGKey(1),
+                                  collect_stats=False)
+    n_out = np.asarray(out["n_out"])
+    assert n_out[0] >= 1 and n_out[1] == 0
+    assert int(state2.length[1]) == int(state.length[1])
+    assert int(state2.length[0]) > int(state.length[0])
+    assert int(state2.anchor[1]) == int(state.anchor[1])
+    assert np.array_equal(np.asarray(state2.d1_feat["k"][:, 1]),
+                          np.asarray(state.d1_feat["k"][:, 1]))
+    assert (np.asarray(out["tokens"])[1] == 0).all()
+
+
+def test_serving_state_replay_backend_smoke():
+    """Early-exit masking also holds for the branch-batched state-replay
+    verifier (recurrent target): outputs match per-request greedy."""
+    tcfg = tiny_target(vocab=43, dtype="float32", layer_pattern=("rwkv",),
+                       rwkv_head_dim=16)
+    dcfg = tiny_drafter(vocab=43, gamma=4, dtype="float32", target_cfg=tcfg)
+    tp = lm.lm_init(jax.random.PRNGKey(0), tcfg)
+    d1 = drafter_init(jax.random.PRNGKey(1), dcfg)
+    d2 = drafter_init(jax.random.PRNGKey(2), dcfg)
+    spec = SpecConfig(gamma=4, top_k_branches=2, mode="d2sd")
+    b = pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 43, size=6).astype(np.int32)
+               for _ in range(3)]
+    wants = [4, 8, 6]
+    eng = ServingEngine(b, batch_size=2)
+    for p, n in zip(prompts, wants):
+        eng.submit(p, max_new=n)
+    eng.run()
+    assert len(eng.done) == 3
+    for r in eng.done:
+        assert np.array_equal(r.out, _ref(b, prompts[r.uid], r.max_new)), \
+            r.uid
