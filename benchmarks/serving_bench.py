@@ -1,15 +1,24 @@
-"""Serving micro-benchmark: early-exit masking + slot refill vs legacy
-all-or-nothing waves.
+"""Serving micro-benchmark: batching policy AND KV storage A/B.
 
 Replays the same mixed traffic (one long budget + sustained short
-requests, mixed prompt lengths) through :class:`ServingEngine` twice —
-once with ``early_exit=False, refill=False`` (the legacy drain-the-wave
-engine) and once with both on — and reports tokens/s plus
-``wasted_row_cycles`` (batch rows that spent a decode cycle without a
-live, unfinished request). Token output is identical across configs
-(greedy decoding, per-row isolation), so the wasted-cycle delta is pure
-batching efficiency. Results land in ``BENCH_serving.json`` at the repo
-root.
+requests, mixed prompt lengths) through :class:`ServingEngine` three
+times —
+
+* ``legacy_waves``      — ``early_exit=False, refill=False``, dense KV
+  (the drain-the-wave engine);
+* ``early_exit_refill`` — both batching optimizations on, dense KV;
+* ``paged``             — batching optimizations on, ``cache_impl="paged"``
+  (page-pool KV storage, page-granular admission, copy-free refill);
+
+and reports tokens/s, ``wasted_row_cycles`` (batch rows that spent a
+decode cycle without a live, unfinished request), pool utilization, and
+``refill_copy_bytes`` — the accounting model of bytes each slot install
+writes (dense: a full ``max_len`` row per cache; paged: prompt-sized
+tail-page writes + one page-table row). Per-request token output is
+asserted identical across ALL configurations (greedy decoding, per-row
+isolation, exact logical-view equivalence of the paged layout), so the
+deltas are pure batching / memory-subsystem efficiency. Results land in
+``BENCH_serving.json`` at the repo root.
 
 Needs no trained study artifacts — builds a tiny random bundle:
 
@@ -31,6 +40,7 @@ from benchmarks.engine_bench import _tiny_bundle
 from repro.serving.engine import ServingEngine
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+PAGE_SIZE = 16
 
 
 def _traffic(vocab: int, quick: bool):
@@ -46,9 +56,11 @@ def _traffic(vocab: int, quick: bool):
             for p, n in zip(plens, budgets)]
 
 
-def _serve(bundle, reqs, batch: int, early_exit: bool, refill: bool):
+def _serve(bundle, reqs, batch: int, early_exit: bool, refill: bool,
+           cache_impl: str = "dense"):
     eng = ServingEngine(bundle, batch_size=batch, seed=0,
-                        early_exit=early_exit, refill=refill)
+                        early_exit=early_exit, refill=refill,
+                        cache_impl=cache_impl, page_size=PAGE_SIZE)
     for p, n in reqs:
         eng.submit(p, max_new=n)
     t0 = time.time()
@@ -67,30 +79,49 @@ def run(quick: bool = False) -> None:
     base, base_out = _serve(bundle, reqs, batch, early_exit=False,
                             refill=False)
     opt, opt_out = _serve(bundle, reqs, batch, early_exit=True, refill=True)
-    tokens_equal = base_out == opt_out
-    assert tokens_equal, "early-exit/refill changed per-request output"
+    pgd, pgd_out = _serve(bundle, reqs, batch, early_exit=True, refill=True,
+                          cache_impl="paged")
+    tokens_equal = base_out == opt_out == pgd_out
+    assert tokens_equal, "batching/storage config changed per-request output"
+    # copy-free refill acceptance: paged installs write page-order bytes
+    assert pgd["installs"] == opt["installs"]
+    assert pgd["refill_copy_bytes"] * 2 < opt["refill_copy_bytes"], (
+        pgd["refill_copy_bytes"], opt["refill_copy_bytes"])
 
     def row(name, s):
+        extra = ""
+        if s.get("pool_pages"):
+            extra = (f" pool_util={s['pool_utilization']:.2f} "
+                     f"pool_peak={s['pool_peak_pages']}/{s['pool_pages']}")
         print(csv_row(
             name, s["wall_clock_s"] * 1e6,
             f"tokens_per_s={s['tokens_per_s']:.1f} "
             f"wasted_row_cycles={s['wasted_row_cycles']} "
             f"alpha={s['alpha']:.3f} waves={s['waves']} "
-            f"refills={s['refills']}"))
+            f"refills={s['refills']} "
+            f"refill_copy_bytes={s['refill_copy_bytes']}" + extra))
 
     row("serving_legacy_waves", base)
     row("serving_early_exit_refill", opt)
+    row("serving_paged_kv", pgd)
     saved = base["wasted_row_cycles"] - opt["wasted_row_cycles"]
+    copy_ratio = (opt["refill_copy_bytes"] / pgd["refill_copy_bytes"]
+                  if pgd["refill_copy_bytes"] else float("inf"))
     print(csv_row("serving_wasted_cycle_reduction", 0.0,
                   f"saved={saved} tokens_equal={tokens_equal}"))
+    print(csv_row("serving_refill_copy_reduction", 0.0,
+                  f"dense/paged={copy_ratio:.1f}x"))
 
     payload = {
         "config": {"gamma": gamma, "k": k, "batch": batch,
-                   "n_requests": len(reqs), "quick": quick},
+                   "n_requests": len(reqs), "quick": quick,
+                   "page_size": PAGE_SIZE},
         "legacy_waves": {k2: v for k2, v in base.items()},
         "early_exit_refill": {k2: v for k2, v in opt.items()},
+        "paged": {k2: v for k2, v in pgd.items()},
         "tokens_equal": tokens_equal,
         "wasted_row_cycles_saved": saved,
+        "refill_copy_bytes_dense_over_paged": copy_ratio,
     }
     BENCH_PATH.write_text(json.dumps(payload, indent=2, default=float))
     print(f"wrote {BENCH_PATH}")

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 (fast) test suite — the CI gate every PR must keep green.
+#
+#   scripts/tier1.sh            # == JAX_PLATFORMS=cpu PYTHONPATH=src pytest -x -q
+#   scripts/tier1.sh tests/test_paged.py   # extra args pass through
+#
+# Pallas kernels run in interpret mode on CPU (pytest marker `pallas`);
+# the full suite including slow statistical sweeps is
+#   scripts/tier1.sh -m "slow or not slow"
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

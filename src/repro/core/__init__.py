@@ -4,7 +4,8 @@
 #
 # Public decode-engine API (post strategy/backend redesign):
 #   pipeline    — SpecBundle, decode_cycle, generate, generate_ondevice
-#   state       — EngineState, engine_init, prefill
+#   state       — EngineState, engine_init (cache_impl dense|paged),
+#                 prefill, install_row (donated slot refill), row_template
 #   strategies  — DraftStrategy protocol + registry (register_strategy)
 #   verify      — VerifierBackend protocol + select_backend, acceptance rules
 #   tree        — candidate prefix trees for joint verification

@@ -25,6 +25,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models import kvcache as kvc
 from repro.models import param as pm
 from repro.models.attention import attend
 from repro.models.layers import apply_rope, dense, rmsnorm, rmsnorm_init
@@ -83,8 +84,26 @@ def drafter_init(key, dcfg: DrafterConfig):
 
 # ----------------------------------------------------------- feature cache --
 def init_feat_cache(dcfg: DrafterConfig, batch: int, max_len: int,
-                    dtype=jnp.bfloat16):
+                    dtype=jnp.bfloat16, cache_impl: str = "dense",
+                    page_size: int = 64, pool_pages=None, page_table=None):
+    """Dense: k/v [L, B, S_max, Hkv, Dh]. Paged: stacked page pools
+    [L, P, page, Hkv, Dh] plus the wave's shared page table ``pt``
+    [B, max_pages] (same page-id space as the target KV pools, so one
+    host allocation covers every cache of a row)."""
     l, hkv, dh = dcfg.num_layers, dcfg.num_kv_heads, dcfg.head_dim
+    if cache_impl == "paged":
+        pool_pages, page_table = kvc.default_page_layout(
+            batch, max_len, page_size, pool_pages, page_table)
+        return {
+            "k": kvc.init_pool(pool_pages, page_size, hkv, dh, dtype,
+                               lead=(l,)),
+            "v": kvc.init_pool(pool_pages, page_size, hkv, dh, dtype,
+                               lead=(l,)),
+            # copy=True: every paged cache holds its own table buffer so
+            # the whole state can be donated (no twice-donated aliases)
+            "pt": jnp.array(page_table, jnp.int32, copy=True),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
     return {
         "k": jnp.zeros((l, batch, max_len, hkv, dh), dtype),
         "v": jnp.zeros((l, batch, max_len, hkv, dh), dtype),
@@ -119,15 +138,21 @@ def extend_feat_cache(p, dcfg, cache, target_features, positions, n_new):
     """
     k_new, v_new = project_features(p, dcfg, target_features, positions)
     b, pl = positions.shape
-    cap = cache["k"].shape[2]
     valid = jnp.arange(pl)[None, :] < n_new[:, None]
-    wpos = jnp.where(valid, positions, cap + 1)
-    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, pl))
     out = dict(cache)
-    out["k"] = cache["k"].at[:, bidx, wpos].set(
-        k_new.astype(cache["k"].dtype), mode="drop")
-    out["v"] = cache["v"].at[:, bidx, wpos].set(
-        v_new.astype(cache["v"].dtype), mode="drop")
+    if kvc.is_paged(cache):
+        out["k"] = kvc.pool_scatter(cache["k"], cache["pt"], k_new,
+                                    positions, valid=valid)
+        out["v"] = kvc.pool_scatter(cache["v"], cache["pt"], v_new,
+                                    positions, valid=valid)
+    else:
+        cap = cache["k"].shape[2]
+        wpos = jnp.where(valid, positions, cap + 1)
+        bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, pl))
+        out["k"] = cache["k"].at[:, bidx, wpos].set(
+            k_new.astype(cache["k"].dtype), mode="drop")
+        out["v"] = cache["v"].at[:, bidx, wpos].set(
+            v_new.astype(cache["v"].dtype), mode="drop")
     out["length"] = cache["length"] + n_new
     return out
 
@@ -157,7 +182,16 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
     elif block_mask is None:
         block_mask = jnp.ones((t, t), dtype=bool)
 
-    cap = feat_cache["k"].shape[2]
+    paged = kvc.is_paged(feat_cache)
+    if paged:
+        # logical per-row view gathered once for all drafter layers;
+        # garbage beyond feat_len is masked below exactly like the dense
+        # cache's zero padding, so both layouts attend identically
+        ctx_k = kvc.pool_view(feat_cache["k"], feat_cache["pt"])
+        ctx_v = kvc.pool_view(feat_cache["v"], feat_cache["pt"])
+    else:
+        ctx_k, ctx_v = feat_cache["k"], feat_cache["v"]
+    cap = ctx_k.shape[2]
     tq = t
     # context visibility: feature entries < feat_len (per-example)
     ctx_ok = (jnp.arange(cap)[None, None, :]
@@ -172,7 +206,7 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
     from repro.distributed import spdecode
     axis = spdecode.kv_seq_axis()
     use_sp = False
-    if axis is not None:
+    if axis is not None and not paged:
         from repro.distributed.sharding import active_mesh
         n_shards = dict(zip(active_mesh().axis_names,
                             active_mesh().devices.shape))[axis]
@@ -188,16 +222,14 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
         k = apply_rope(k, positions, dcfg.rope_theta)
         if use_sp:
             y = spdecode.sharded_cache_attend(
-                q, feat_cache["k"][i].astype(k.dtype),
-                feat_cache["v"][i].astype(v.dtype), k, v,
+                q, ctx_k[i].astype(k.dtype),
+                ctx_v[i].astype(v.dtype), k, v,
                 cache_len=feat_len, q_abs=positions, window=None,
                 attn_softcap=None, blk_mask=blk, rolling=False,
                 kv_chunk=kv_chunk)
         else:
-            kk = jnp.concatenate(
-                [feat_cache["k"][i].astype(k.dtype), k], axis=1)
-            vv = jnp.concatenate(
-                [feat_cache["v"][i].astype(v.dtype), v], axis=1)
+            kk = jnp.concatenate([ctx_k[i].astype(k.dtype), k], axis=1)
+            vv = jnp.concatenate([ctx_v[i].astype(v.dtype), v], axis=1)
             y = attend(q, kk, vv, causal=False, extra_mask=full_mask,
                        impl=attn_impl, kv_chunk=kv_chunk)
         x = x + dense(lp["wo"], y.reshape(b, t, hq * dh))

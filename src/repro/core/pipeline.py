@@ -135,7 +135,8 @@ _cycle_jit = functools.partial(
 
 def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
              max_len: Optional[int] = None, collect_stats: bool = True,
-             early_exit: bool = True):
+             early_exit: bool = True, cache_impl: str = "dense",
+             page_size: int = 64):
     """Generate up to ``max_new`` tokens for prompts [B, P] (host loop over
     jitted cycles). Returns dict(tokens [B, max_new], n_cycles, alpha, stats).
 
@@ -143,6 +144,11 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
     committing tokens / mutating caches (per-example ``EngineState.active``);
     token output is identical either way — only finished rows' wasted
     commits (and their dilution of ``alpha``) change.
+
+    cache_impl: "dense" | "paged" KV storage (identity page layout here —
+    the serving engine owns real page allocation). Token output is
+    identical across impls: the paged logical view matches the dense cache
+    at every committed position and garbage beyond it is masked the same.
 
     Back-compat wrapper: use :func:`generate_ondevice` when you do not need
     per-cycle calibration stats — it avoids the per-cycle host sync.
@@ -153,7 +159,8 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
     g = bundle.spec.gamma
     key = key if key is not None else jax.random.PRNGKey(0)
     max_len = max_len or (p + max_new + 2 * g + 8)
-    state = engine_init(bundle, b, max_len)
+    state = engine_init(bundle, b, max_len, cache_impl=cache_impl,
+                        page_size=page_size)
     kpre, key = jax.random.split(key)
     state = prefill(bundle, state, prompts, key=kpre, ctx=ctx,
                     temperature=bundle.spec.temperature)
@@ -206,9 +213,11 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("max_new", "max_len", "early_exit"))
+                   static_argnames=("max_new", "max_len", "early_exit",
+                                    "cache_impl", "page_size"))
 def _ondevice_loop(bundle: SpecBundle, prompts, key, max_new: int,
-                   max_len: int, early_exit: bool = True):
+                   max_len: int, early_exit: bool = True,
+                   cache_impl: str = "dense", page_size: int = 64):
     """Prefill + full decode loop inside one ``lax.while_loop``.
 
     With ``early_exit`` the per-example ``EngineState.active`` mask is
@@ -223,7 +232,8 @@ def _ondevice_loop(bundle: SpecBundle, prompts, key, max_new: int,
     cap = buf_width = max_new + bundle.spec.gamma + 1
     cycle_cap = max_new + 9          # mirrors the host loop's bailout
 
-    state = engine_init(bundle, b, max_len)
+    state = engine_init(bundle, b, max_len, cache_impl=cache_impl,
+                        page_size=page_size)
     kpre, key = jax.random.split(key)
     state = prefill(bundle, state, prompts, key=kpre,
                     temperature=bundle.spec.temperature)
@@ -263,7 +273,8 @@ def _ondevice_loop(bundle: SpecBundle, prompts, key, max_new: int,
 
 def generate_ondevice(bundle: SpecBundle, prompts, max_new: int, key=None,
                       max_len: Optional[int] = None,
-                      early_exit: bool = True):
+                      early_exit: bool = True, cache_impl: str = "dense",
+                      page_size: int = 64):
     """On-device generation: the whole decode loop runs inside a single
     ``jax.lax.while_loop`` with a padded output buffer — zero host syncs
     between cycles. Token-identical to :func:`generate` for the same key
@@ -282,7 +293,9 @@ def generate_ondevice(bundle: SpecBundle, prompts, max_new: int, key=None,
     max_len = max_len or (p + max_new + 2 * g + 8)
     buf, n_cycles, total, act = _ondevice_loop(bundle, prompts, key,
                                                max_new, max_len,
-                                               early_exit=early_exit)
+                                               early_exit=early_exit,
+                                               cache_impl=cache_impl,
+                                               page_size=page_size)
     n = int(n_cycles)
     act = int(act)
     alpha = float(total) / act if act else 0.0

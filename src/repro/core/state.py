@@ -10,17 +10,41 @@ EngineState via :meth:`replace`.
 Field shapes are allocated once per request wave by :func:`engine_init`
 (static ``batch`` / ``max_len``), which is what lets the whole generation
 loop run on device without host round-trips.
+
+KV storage is pluggable (``cache_impl``): ``dense`` keeps per-row
+contiguous buffers; ``paged`` backs the target global-attention KV and
+both feature caches with shared page pools + per-row page tables (see
+``repro.models.kvcache``). In paged mode slot refill is copy-free:
+:func:`row_template` builds a batch-1 state that *shares* the wave's
+pools with a one-row page table of freshly allocated pages, ``prefill``
+writes the prompt KV straight into those pages, and :meth:`adopt_row`
+then only patches the page-table row and splices the small dense leaves.
+:func:`install_row` wraps that sequence in a donated ``jit`` so the whole
+install lowers to in-place page writes (the dense path gets the same
+donated treatment, turning the old full-state ``adopt_row`` copy into an
+in-place row splice).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import drafter as dr
+from repro.models import kvcache as kvc
 from repro.models import lm
+
+
+def _feat_axis(name: str) -> int:
+    """Batch axis of a feature-cache leaf by key: "length" and "pt" are
+    batch-leading [B, ...], k/v are [L, B, ...]. (Paged traversals handle
+    "pt" before consulting this — the 0 here keeps the contract honest for
+    any caller that does not.)"""
+    return 0 if name in ("length", "pt") else 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,9 +78,26 @@ class EngineState:
         return self.anchor.shape[0]
 
     @property
+    def cache_impl(self) -> str:
+        """"dense" | "paged" — detected structurally (feature caches are
+        paged exactly when the wave is)."""
+        return "paged" if kvc.is_paged(self.d1_feat) else "dense"
+
+    @property
     def max_len(self) -> int:
-        """Static cache capacity this state was allocated with."""
+        """Static logical cache capacity this state was allocated with
+        (max_pages * page_size when paged)."""
+        if kvc.is_paged(self.d1_feat):
+            return kvc.logical_len(self.d1_feat)
         return self.d1_feat["k"].shape[2]
+
+    @property
+    def page_size(self) -> int:
+        return kvc.page_geometry(self.d1_feat)[0]
+
+    @property
+    def max_pages(self) -> int:
+        return kvc.page_geometry(self.d1_feat)[1]
 
     def replace(self, **kw) -> "EngineState":
         return dataclasses.replace(self, **kw)
@@ -69,16 +110,21 @@ class EngineState:
         overwritten with a freshly prefilled single-request state (same
         ``max_len``), leaving every other row untouched. ``row`` may be a
         traced index; ``other`` is typically batch-1.
+
+        Paged caches follow the shared-pool contract: ``other`` must hold
+        the *same* (updated) pools as ``self`` — built via
+        :func:`row_template` — so its k/v pool arrays pass through
+        wholesale and only the page-table row is spliced. Under a donated
+        jit that makes the adopt an in-place row/table write instead of a
+        full-state copy.
         """
-        # feature caches: "length" is batch-leading, k/v are [L, B, T, H, D]
-        f_ax = lambda name: 0 if name == "length" else 1      # noqa: E731
         return EngineState(
             target=_adopt_dict(self.target, other.target, row, src_row,
                                lm.state_batch_axis),
-            d1_feat=_adopt_dict(self.d1_feat, other.d1_feat, row, src_row,
-                                f_ax),
-            d2_feat=_adopt_dict(self.d2_feat, other.d2_feat, row, src_row,
-                                f_ax),
+            d1_feat=_adopt_block(self.d1_feat, other.d1_feat, row, src_row,
+                                 _feat_axis),
+            d2_feat=_adopt_block(self.d2_feat, other.d2_feat, row, src_row,
+                                 _feat_axis),
             anchor=_splice_row(self.anchor, other.anchor, row, src_row, 0),
             active=_splice_row(self.active, other.active, row, src_row, 0),
         )
@@ -100,28 +146,65 @@ def _splice_row(dst, src, row, src_row, axis):
         dst, sl.astype(dst.dtype), row, axis)
 
 
-def _adopt_dict(dst, src, row, src_row, axis_for):
+def _adopt_block(dst, src, row, src_row, axis_for):
+    """Adopt one block/cache dict; ``axis_for(key)`` gives the batch axis
+    of dense leaves. Paged pools pass through from ``src`` (shared-pool
+    contract) and the page table splices along its own batch axis."""
     out = {}
+    paged = kvc.is_paged(dst)
     for name, v in dst.items():
-        ax = axis_for(name)
-        out[name] = jax.tree.map(
-            lambda d, s, a=ax: _splice_row(d, s, row, src_row, a),
-            v, src[name])
+        if paged and name in ("k", "v"):
+            out[name] = src[name]
+        elif name == "pt":
+            out[name] = _splice_row(v, src[name], row, src_row, v.ndim - 2)
+        else:
+            ax = axis_for(name)
+            out[name] = jax.tree.map(
+                lambda d, s, a=ax: _splice_row(d, s, row, src_row, a),
+                v, src[name])
     return out
 
 
-def engine_init(bundle, batch: int, max_len: int,
-                ctx_len: int = 0) -> EngineState:
-    """Allocate caches for a request wave (``bundle``: pipeline.SpecBundle)."""
+def _adopt_dict(dst, src, row, src_row, axis_for):
+    out = {}
+    for name, v in dst.items():
+        if isinstance(v, dict):
+            out[name] = _adopt_block(v, src[name], row, src_row,
+                                     lambda _n, a=axis_for(name): a)
+        else:
+            out[name] = _splice_row(v, src[name], row, src_row,
+                                    axis_for(name))
+    return out
+
+
+def engine_init(bundle, batch: int, max_len: int, ctx_len: int = 0,
+                cache_impl: str = "dense", page_size: int = 64,
+                pool_pages=None, page_table=None) -> EngineState:
+    """Allocate caches for a request wave (``bundle``: pipeline.SpecBundle).
+
+    cache_impl="paged": every paged cache of the wave (target global KV
+    and both feature caches) shares ONE page-id space: ``page_table``
+    [B, max_pages] applies to all of them, and ``pool_pages`` sizes each
+    pool. Defaults reproduce the allocator-free identity layout (row i
+    owns pages [i*MP, (i+1)*MP)) used by ``generate``; the serving engine
+    passes an initially-unallocated table and patches rows at install.
+    """
     tcfg = bundle.target_cfg
     dt = jnp.dtype(tcfg.dtype)
+    if cache_impl == "paged":
+        pool_pages, page_table = kvc.default_page_layout(
+            batch, max_len, page_size, pool_pages, page_table)
+    kw = dict(cache_impl=cache_impl, page_size=page_size,
+              pool_pages=pool_pages, page_table=page_table)
     return EngineState(
         target=lm.init_states(tcfg, batch, max_len, ctx_len=ctx_len,
-                              dtype=dt),
+                              dtype=dt, **kw),
         d1_feat=dr.init_feat_cache(bundle.d1_cfg, batch, max_len,
-                                   dtype=jnp.dtype(bundle.d1_cfg.dtype)),
+                                   dtype=jnp.dtype(bundle.d1_cfg.dtype),
+                                   **kw),
         d2_feat=dr.init_feat_cache(bundle.d2_cfg, batch, max_len,
-                                   dtype=jnp.dtype(bundle.d2_cfg.dtype)),
+                                   dtype=jnp.dtype(bundle.d2_cfg.dtype),
+                                   **kw),
         anchor=jnp.zeros((batch,), jnp.int32),
         active=jnp.ones((batch,), bool),
     )
@@ -157,18 +240,164 @@ def prefill(bundle, state: EngineState, prompts, key=None, ctx=None,
                          anchor=anchor.astype(jnp.int32))
 
 
-def prefill_row(bundle, state: EngineState, row, prompt, key=None, ctx=None,
-                temperature: float = 0.0, ctx_len: int = 0) -> EngineState:
-    """Prefill a single request into one row of an in-flight state.
+# ------------------------------------------------------- slot install -------
+def _zeros_row(a, ax):
+    if not hasattr(a, "ndim") or a.ndim == 0:
+        return a
+    return jnp.zeros_like(jax.lax.slice_in_dim(a, 0, 1, axis=ax))
 
-    Allocates a batch-1 state with the same ``max_len``, runs the normal
-    prefill over ``prompt`` [P], and splices the result into ``row`` via
-    :meth:`EngineState.adopt_row`. Other rows' caches, lengths, and anchors
-    are untouched, so a serving engine can retire a finished request and
-    re-use its slot without re-prefilling the rest of the wave.
+
+def row_template(state: EngineState, row_table) -> EngineState:
+    """Batch-1 install target *sharing* this wave's page pools.
+
+    ``row_table`` [max_pages] int32: the physical pages the host allocator
+    granted the incoming request (unallocated slots = the out-of-range
+    sentinel). Dense leaves (local rolling KV, recurrent states, lengths,
+    anchor) become zeroed batch-1 rows; paged pools are passed by
+    reference with the one-row table, so a ``prefill`` on the result
+    writes the prompt's KV directly into the wave's pools at the new
+    pages. ``adopt_row`` afterwards only patches the page-table row and
+    splices the small dense leaves — the copy-free refill contract.
+    """
+    rt = jnp.asarray(row_table, jnp.int32)[None]            # [1, MP]
+
+    def blk(d, axis_for):
+        paged = kvc.is_paged(d)
+        out = {}
+        for name, v in d.items():
+            if paged and name in ("k", "v"):
+                out[name] = v
+            elif name == "pt":
+                out[name] = jnp.broadcast_to(
+                    rt, v.shape[:-2] + (1, v.shape[-1]))
+            else:
+                ax = axis_for(name)
+                out[name] = jax.tree.map(
+                    lambda a, x=ax: _zeros_row(a, x), v)
+        return out
+
+    target = {}
+    for name, v in state.target.items():
+        if isinstance(v, dict):
+            target[name] = blk(v, lambda _n, a=lm.state_batch_axis(name): a)
+        else:
+            target[name] = _zeros_row(v, 0)
+    return EngineState(
+        target=target,
+        d1_feat=blk(state.d1_feat, _feat_axis),
+        d2_feat=blk(state.d2_feat, _feat_axis),
+        anchor=jnp.zeros((1,), jnp.int32),
+        active=jnp.ones((1,), bool),
+    )
+
+
+def _install_impl(bundle, state, row, prompt, key, row_table,
+                  temperature: float, ctx_len: int):
+    if state.cache_impl == "paged":
+        sub = row_template(state, row_table)
+    else:
+        sub = engine_init(bundle, 1, state.max_len, ctx_len=ctx_len)
+    sub = prefill(bundle, sub, prompt[None, :], key=key,
+                  temperature=temperature)
+    return state.adopt_row(row, sub)
+
+
+# Donated install: `state` is consumed — XLA rewrites the row / tail pages
+# in place instead of copying the wave state. One trace per
+# (prompt length, state shapes); `row` and `row_table` are traced.
+_install_row_donated = functools.partial(
+    jax.jit, static_argnames=("temperature", "ctx_len"),
+    donate_argnames=("state",))(_install_impl)
+
+
+def install_row(bundle, state: EngineState, row, prompt, key=None,
+                temperature: float = 0.0, row_table=None,
+                ctx_len: int = 0) -> EngineState:
+    """Serving fast path: prefill ``prompt`` into ``row`` with the input
+    ``state`` DONATED (caller must drop its reference). Paged states
+    require ``row_table`` (the allocated pages); dense states splice via
+    an in-place row write."""
+    prompt = jnp.asarray(prompt, jnp.int32)
+    if state.cache_impl == "paged":
+        assert row_table is not None, "paged install needs allocated pages"
+        row_table = jnp.asarray(row_table, jnp.int32)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return _install_row_donated(bundle, state, jnp.asarray(row, jnp.int32),
+                                prompt, key, row_table,
+                                temperature=temperature, ctx_len=ctx_len)
+
+
+def prefill_row(bundle, state: EngineState, row, prompt, key=None, ctx=None,
+                temperature: float = 0.0, ctx_len: int = 0,
+                row_table=None) -> EngineState:
+    """Prefill a single request into one row of an in-flight state
+    (non-donating; ``state`` stays valid — see :func:`install_row` for the
+    donated serving path).
+
+    Dense: allocates a batch-1 state with the same ``max_len``, runs the
+    normal prefill over ``prompt`` [P], and splices the result into
+    ``row`` via :meth:`EngineState.adopt_row`. Paged: prefills through a
+    pool-sharing :func:`row_template`; ``row_table`` defaults to the
+    identity layout's pages for ``row`` (requires a concrete ``row``).
     """
     prompt = jnp.asarray(prompt, jnp.int32)
-    sub = engine_init(bundle, 1, state.max_len, ctx_len=ctx_len)
+    if state.cache_impl == "paged" and row_table is None:
+        mp = state.max_pages
+        row_table = int(row) * mp + jnp.arange(mp, dtype=jnp.int32)
+    if ctx is None:
+        return _install_impl(bundle, state, row, prompt,
+                             key if key is not None else jax.random.PRNGKey(0),
+                             row_table, temperature, ctx_len)
+    # cross-attention contexts stay on the eager path (ctx shapes vary)
+    sub = (row_template(state, row_table)
+           if state.cache_impl == "paged"
+           else engine_init(bundle, 1, state.max_len, ctx_len=ctx_len))
     sub = prefill(bundle, sub, prompt[None, :], key=key, ctx=ctx,
                   temperature=temperature)
     return state.adopt_row(row, sub)
+
+
+# ------------------------------------------------------- install accounting -
+def _row_nbytes(a, ax) -> int:
+    if not hasattr(a, "ndim") or a.ndim == 0 or ax >= a.ndim:
+        return 0
+    return a.nbytes // a.shape[ax]
+
+
+def refill_copy_bytes(state: EngineState, n_tokens: int) -> int:
+    """Bytes one slot install writes into the wave state (accounting model
+    for ``BENCH_serving.json``).
+
+    Dense: ``adopt_row`` rewrites a full row of every cache — max_len
+    positions of target KV and drafter features regardless of the prompt
+    length. Paged: only the ``n_tokens`` prompt positions land in the
+    pools (tail-page writes) plus one page-table row and the small dense
+    leaves (window-capped local KV, recurrent states, scalars) — page-size
+    order, which is the acceptance criterion for copy-free refill.
+    """
+    def block_bytes(d, axis_for) -> int:
+        total = 0
+        paged = kvc.is_paged(d)
+        for name, v in d.items():
+            if paged and name in ("k", "v"):
+                lead = int(np.prod(v.shape[:-4], dtype=np.int64))
+                h, dh = v.shape[-2], v.shape[-1]
+                total += int(n_tokens) * lead * h * dh * v.dtype.itemsize
+            elif name == "pt":
+                total += _row_nbytes(v, v.ndim - 2)
+            else:
+                ax = axis_for(name)
+                total += sum(_row_nbytes(a, ax)
+                             for a in jax.tree.leaves(v))
+        return total
+
+    total = 0
+    for name, v in state.target.items():
+        if isinstance(v, dict):
+            total += block_bytes(v, lambda _n, a=lm.state_batch_axis(name): a)
+        else:
+            total += _row_nbytes(v, 0)
+    total += block_bytes(state.d1_feat, _feat_axis)
+    total += block_bytes(state.d2_feat, _feat_axis)
+    total += _row_nbytes(state.anchor, 0) + _row_nbytes(state.active, 0)
+    return total

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from repro.core import tree as tree_lib
 from repro.core.tree import (Tree, best_path, children_table,
                              propagate_acceptance)
+from repro.models import kvcache as kvc
 from repro.models import lm
 
 
@@ -232,8 +233,19 @@ class StateReplayVerifier(VerifierBackend):
                 return a
             return jnp.repeat(a, r, axis=lm.state_batch_axis(key_name))
 
-        states_rep = {k2: (jax.tree.map(lambda a: rep(k2, a), v)
-                           if isinstance(v, dict) else rep(k2, v))
+        def rep_block(k2, v):
+            if kvc.is_paged(v):
+                # paged KV: the pool has no batch axis — replicate only
+                # the page-table rows (branches share the row's pages for
+                # this read-only pass) and any dense leaves
+                return {kk: (vv if kk in ("k", "v") else
+                             jnp.repeat(vv, r, axis=vv.ndim - 2)
+                             if kk == "pt" else rep(k2, vv))
+                        for kk, vv in v.items()}
+            return jax.tree.map(lambda a: rep(k2, a), v)
+
+        states_rep = {k2: (rep_block(k2, v) if isinstance(v, dict)
+                           else rep(k2, v))
                       for k2, v in state.target.items()}
         vout = lm.forward(bundle.target_params, row_tokens, tcfg,
                           states=states_rep, write_kv=False, remat=False)

@@ -17,6 +17,17 @@ This is also the decode kernel: a chain of 1 token is a degenerate tree.
 Masking supports per-example cache lengths (ragged batch), sliding windows
 (gemma2/recurrentgemma local layers; rolling-buffer position recovery), and
 per-query absolute positions (tree nodes sit at cache_len + depth).
+
+Paged variant (:func:`cascade_phase1_paged`): the KV cache is a page pool
+``[P, Hkv, page, D]`` plus per-row page tables ``[B, max_pages]`` (the
+serving engine's ``cache_impl="paged"`` layout, models/kvcache.py). The
+page table rides in as a scalar-prefetch operand
+(``pltpu.PrefetchScalarGridSpec``) so the K/V BlockSpec ``index_map``
+resolves each grid step's LOGICAL page to its PHYSICAL pool page before
+the DMA is issued — the kernel streams exactly the row's pages out of HBM
+with no gather materialization, keeping the same split-K grid and
+ragged/sliding-window masking as the dense kernel (logical key positions
+are unchanged; only the addressing is indirected).
 """
 from __future__ import annotations
 
@@ -152,33 +163,19 @@ def cascade_phase1(q, cache_k, cache_v, *, cache_len, q_abs, window=None,
     return acc, m, l
 
 
-def cascade_attention(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
-                      q_abs, tree_mask, window=None, attn_softcap=None,
-                      scale=None, rolling=False, n_splits=8, bk=512,
-                      interpret=False):
-    """Full cascade verify: phase-1 kernel over the cache + jnp tree-local
-    phase-2 + LSE merge.
-
-    q [B,Hq,Tq,D]; cache [B,Hkv,S,D]; blk [B,Hkv,Tb,D];
-    tree_mask [B,Tq,Tb] (ancestor mask); returns [B,Hq,Tq,D].
-    """
-    b, hq, tq, d = q.shape
-    hkv = cache_k.shape[1]
-    g = hq // hkv
-    scale_v = scale if scale is not None else d ** -0.5
-    acc, m, l = cascade_phase1(
-        q, cache_k, cache_v, cache_len=cache_len, q_abs=q_abs, window=window,
-        attn_softcap=attn_softcap, scale=scale_v, rolling=rolling,
-        n_splits=n_splits, bk=bk, interpret=interpret)
-
+def _merge_with_tree_block(q, blk_k, blk_v, acc, m, l, *, tree_mask,
+                           attn_softcap, scale):
+    """Shared phase 2: merge phase-1 split partials by log-sum-exp with the
+    tree-masked local attention (tiny, T_tree^2 — fp32 jnp)."""
+    g = q.shape[1] // blk_k.shape[1]
     # merge splits
     m_g = m.max(axis=2)                                        # [B,Hq,Tq]
     corr = jnp.exp(m - m_g[:, :, None])
     l_g = (l * corr).sum(axis=2)
     acc_g = (acc * corr[..., None]).sum(axis=2)               # [B,Hq,Tq,D]
 
-    # phase 2: tree-local attention (tiny) in fp32 jnp
-    qf = q.astype(jnp.float32) * scale_v
+    # phase 2: tree-local attention
+    qf = q.astype(jnp.float32) * scale
     kq = jnp.repeat(blk_k.astype(jnp.float32), g, axis=1)
     vq = jnp.repeat(blk_v.astype(jnp.float32), g, axis=1)
     sc = jnp.einsum("bhqd,bhtd->bhqt", qf, kq)
@@ -199,3 +196,186 @@ def cascade_attention(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
     out = (acc_g * a1[..., None] + acc_b * a2[..., None]) / jnp.maximum(
         l_g * a1 + l_b * a2, 1e-30)[..., None]
     return out.astype(q.dtype)
+
+
+def cascade_attention(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
+                      q_abs, tree_mask, window=None, attn_softcap=None,
+                      scale=None, rolling=False, n_splits=8, bk=512,
+                      interpret=False):
+    """Full cascade verify: phase-1 kernel over the cache + jnp tree-local
+    phase-2 + LSE merge.
+
+    q [B,Hq,Tq,D]; cache [B,Hkv,S,D]; blk [B,Hkv,Tb,D];
+    tree_mask [B,Tq,Tb] (ancestor mask); returns [B,Hq,Tq,D].
+    """
+    d = q.shape[-1]
+    scale_v = scale if scale is not None else d ** -0.5
+    acc, m, l = cascade_phase1(
+        q, cache_k, cache_v, cache_len=cache_len, q_abs=q_abs, window=window,
+        attn_softcap=attn_softcap, scale=scale_v, rolling=rolling,
+        n_splits=n_splits, bk=bk, interpret=interpret)
+    return _merge_with_tree_block(q, blk_k, blk_v, acc, m, l,
+                                  tree_mask=tree_mask,
+                                  attn_softcap=attn_softcap, scale=scale_v)
+
+
+# ------------------------------------------------------------- paged -------
+def _phase1_paged_kernel(pt_ref, cache_len_ref, q_abs_ref,    # scalar prefetch
+                         q_ref, k_ref, v_ref,                 # VMEM blocks
+                         acc_ref, m_ref, l_ref,               # outputs
+                         racc, rm, rl,                        # scratch
+                         *, page, nk_inner, tq, window, softcap, scale):
+    """Identical flash accumulation to ``_phase1_kernel`` with one KV page
+    per inner step. The physical page was already resolved by the BlockSpec
+    index_map (scalar-prefetched page table), so the body only deals in
+    LOGICAL key positions: page ``s*nk_inner + jj`` holds positions
+    [base, base+page). Unallocated logical pages surface garbage from a
+    clamped pool page and die on the ``kpos < cache_len`` mask, exactly
+    like the dense kernel's tail padding."""
+    b = pl.program_id(0)
+    s = pl.program_id(2)       # split index
+    jj = pl.program_id(3)      # inner page step within the split
+
+    @pl.when(jj == 0)
+    def _init():
+        racc[...] = jnp.zeros_like(racc)
+        rm[...] = jnp.full_like(rm, NEG_INF)
+        rl[...] = jnp.zeros_like(rl)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # [tq, D]
+    k = k_ref[0, 0].astype(jnp.float32)                      # [page, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [tq, page]
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+
+    clen = cache_len_ref[b]
+    base = (s * nk_inner + jj) * page
+    kpos = base + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    qpos = q_abs_ref[pl.dslice(b * tq, tq)]                  # [tq]
+    qp = qpos[:, None]
+    ok = (kpos < clen) & (kpos <= qp)
+    if window is not None:
+        ok &= kpos > (qp - window)
+    sc = jnp.where(ok, sc, NEG_INF)
+
+    m_prev = rm[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=1))
+    p = jnp.exp(sc - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    rl[...] = rl[...] * alpha + p.sum(axis=1)
+    racc[...] = racc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    rm[...] = m_new
+
+    @pl.when(jj == nk_inner - 1)
+    def _final():
+        acc_ref[0, 0, 0] = racc[...]
+        m_ref[0, 0, 0] = rm[...]
+        l_ref[0, 0, 0] = rl[...]
+
+
+def cascade_phase1_paged(q, pool_k, pool_v, page_table, *, cache_len, q_abs,
+                         window=None, attn_softcap=None, scale=None,
+                         n_splits=8, interpret=False):
+    """Split-K flash partials over a PAGED cache.
+
+    q [B,Hq,Tq,D]; pools [P,Hkv,page,D]; page_table [B,max_pages] physical
+    page ids (out-of-range entries = unallocated; they are clamped for the
+    DMA and masked by ``cache_len``). One grid step streams one page; the
+    table is a scalar-prefetch operand so the index_map can address pages
+    data-dependently — the TPU analogue of paged attention's block table.
+    Returns flash partials acc [B,Hq,ns,Tq,D], m/l [B,Hq,ns,Tq].
+    """
+    b, hq, tq, d = q.shape
+    hkv, page = pool_k.shape[1], pool_k.shape[2]
+    n_phys = pool_k.shape[0]
+    g = hq // hkv
+    mp = page_table.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    n_splits = max(1, min(n_splits, mp))
+    # keep the requested split count by padding the TABLE (not the pool)
+    # with sentinel pages — mirrors the dense kernel's cache padding, so a
+    # prime max_pages does not collapse the split-K parallelism. Padded
+    # pages clamp to the last physical page and die on the kpos<cache_len
+    # mask (their logical positions start at mp*page >= any cache_len).
+    pad = (-mp) % n_splits
+    page_table = jnp.asarray(page_table, jnp.int32).reshape(-1, mp)
+    if pad:
+        page_table = jnp.pad(page_table, ((0, 0), (0, pad)),
+                             constant_values=n_phys)
+        mp = mp + pad
+    nk_inner = mp // n_splits
+
+    pt = jnp.minimum(page_table, n_phys - 1).reshape(-1)      # [B*MP]
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+    qa = jnp.broadcast_to(
+        jnp.asarray(q_abs, jnp.int32).reshape(b, tq), (b, tq)).reshape(-1)
+
+    kernel = functools.partial(
+        _phase1_paged_kernel, page=page, nk_inner=nk_inner, tq=tq,
+        window=window, softcap=attn_softcap, scale=scale)
+
+    def kv_map(b_, h, s, j, pt_ref, clen_ref, qa_ref, g=g, nki=nk_inner,
+               mp=mp):
+        return (pt_ref[b_ * mp + s * nki + j], h // g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hq, n_splits, nk_inner),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, d),
+                         lambda b_, h, s, j, pt_, cl_, qa_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d), kv_map),
+            pl.BlockSpec((1, 1, page, d), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, tq, d),
+                         lambda b_, h, s, j, pt_, cl_, qa_: (b_, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, tq),
+                         lambda b_, h, s, j, pt_, cl_, qa_: (b_, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, tq),
+                         lambda b_, h, s, j, pt_, cl_, qa_: (b_, h, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, d), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hq, n_splits, tq, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, hq, n_splits, tq), jnp.float32),
+        jax.ShapeDtypeStruct((b, hq, n_splits, tq), jnp.float32),
+    ]
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pt, clen, qa, q, pool_k, pool_v)
+    return acc, m, l
+
+
+def cascade_attention_paged(q, pool_k, pool_v, page_table, blk_k, blk_v, *,
+                            cache_len, q_abs, tree_mask, window=None,
+                            attn_softcap=None, scale=None, n_splits=8,
+                            interpret=False):
+    """Paged cascade verify: page-table phase-1 + shared phase-2 merge.
+
+    Same contract as :func:`cascade_attention` with the long cache given
+    as (pool [P,Hkv,page,D], page_table [B,max_pages]) instead of a dense
+    [B,Hkv,S,D] buffer; logical key position ``j`` of row ``b`` lives at
+    ``pool[page_table[b, j // page], :, j % page]``.
+    """
+    d = q.shape[-1]
+    scale_v = scale if scale is not None else d ** -0.5
+    acc, m, l = cascade_phase1_paged(
+        q, pool_k, pool_v, page_table, cache_len=cache_len, q_abs=q_abs,
+        window=window, attn_softcap=attn_softcap, scale=scale_v,
+        n_splits=n_splits, interpret=interpret)
+    return _merge_with_tree_block(q, blk_k, blk_v, acc, m, l,
+                                  tree_mask=tree_mask,
+                                  attn_softcap=attn_softcap, scale=scale_v)

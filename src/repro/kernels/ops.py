@@ -94,3 +94,31 @@ def cascade_attention(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
         scale=scale, rolling=rolling, n_splits=n_splits, bk=bk,
         interpret=interpret)
     return jnp.swapaxes(o, 1, 2) if layout == "BTHD" else o
+
+
+def cascade_attention_paged(q, pool_k, pool_v, page_table, blk_k, blk_v, *,
+                            cache_len, q_abs, tree_mask, window=None,
+                            attn_softcap=None, scale=None, n_splits=8,
+                            interpret: Optional[bool] = None,
+                            layout="BTHD"):
+    """Cascade verify over a PAGED cache (``cache_impl="paged"`` storage).
+
+    ``pool_k`` / ``pool_v``: page pools in the engine's storage layout
+    [P, page, Hkv, D] (``layout="BTHD"``, matching models/kvcache.py) or
+    the kernel layout [P, Hkv, page, D] (``layout="BHTD"``).
+    ``page_table`` [B, max_pages]: physical page of each logical page
+    (out-of-range sentinel entries mark unallocated pages). The page table
+    is scalar-prefetched so the Pallas kernel DMAs pages straight from the
+    pool — no dense gather of the logical view.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if layout == "BTHD":
+        q_, bk_, bv = (jnp.swapaxes(x, 1, 2) for x in (q, blk_k, blk_v))
+        pk, pv = (jnp.swapaxes(x, 1, 2) for x in (pool_k, pool_v))
+    else:
+        q_, bk_, bv, pk, pv = q, blk_k, blk_v, pool_k, pool_v
+    o = casc.cascade_attention_paged(
+        q_, pk, pv, page_table, bk_, bv, cache_len=cache_len, q_abs=q_abs,
+        tree_mask=tree_mask, window=window, attn_softcap=attn_softcap,
+        scale=scale, n_splits=n_splits, interpret=interpret)
+    return jnp.swapaxes(o, 1, 2) if layout == "BTHD" else o

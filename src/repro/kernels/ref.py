@@ -93,3 +93,28 @@ def cascade_attention_ref(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
     o = jnp.einsum("bhqk,bhkd->bhqd",
                    p / jnp.maximum(p.sum(-1), 1e-30)[..., None], vq)
     return o.astype(q.dtype)
+
+
+def gather_pages(pool, page_table):
+    """Materialize the logical [B,Hkv,MP*page,D] cache view of a page pool
+    [P,Hkv,page,D] (kernel layout). Out-of-range table entries clamp to
+    the last physical page; the garbage they surface lies at logical
+    positions >= cache_len and is masked by the attention semantics."""
+    n_phys = pool.shape[0]
+    pt = jnp.clip(jnp.asarray(page_table, jnp.int32), 0, n_phys - 1)
+    v = pool[pt]                                   # [B, MP, Hkv, page, D]
+    b, mp, hkv, page, d = v.shape
+    return jnp.moveaxis(v, 2, 1).reshape(b, hkv, mp * page, d)
+
+
+def cascade_attention_paged_ref(q, pool_k, pool_v, page_table, blk_k, blk_v,
+                                *, cache_len, q_abs, tree_mask, window=None,
+                                attn_softcap=None, scale=None):
+    """Oracle for the paged cascade kernel: gather the logical view, then
+    run the dense cascade oracle on it (paged indexing changes only WHERE
+    keys live, never the attention semantics)."""
+    return cascade_attention_ref(
+        q, gather_pages(pool_k, page_table), gather_pages(pool_v, page_table),
+        blk_k, blk_v, cache_len=cache_len, q_abs=q_abs, tree_mask=tree_mask,
+        window=window, attn_softcap=attn_softcap, scale=scale,
+        rolling=False)

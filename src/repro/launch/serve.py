@@ -29,6 +29,12 @@ def main():
     ap.add_argument("--task", default="math")
     ap.add_argument("--random", action="store_true",
                     help="random weights (no study artifacts needed)")
+    ap.add_argument("--cache-impl", default="dense",
+                    choices=["dense", "paged"],
+                    help="KV storage: dense per-row buffers or the page-"
+                         "pool subsystem (page-granular admission, "
+                         "copy-free slot refill)")
+    ap.add_argument("--page-size", type=int, default=64)
     args = ap.parse_args()
 
     if args.random:
@@ -51,7 +57,9 @@ def main():
         bundle = build_bundle(args.mode, gamma=args.gamma, k=args.k,
                               temperature=args.temperature)
 
-    eng = ServingEngine(bundle, batch_size=args.requests)
+    eng = ServingEngine(bundle, batch_size=args.requests,
+                        cache_impl=args.cache_impl,
+                        page_size=args.page_size)
     ds = SyntheticDataset(args.task, 1, 64, seed=11)
     for p in ds.prompts(args.requests, 32, offset=10 ** 7):
         eng.submit(p, max_new=args.max_new)

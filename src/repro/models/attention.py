@@ -192,6 +192,69 @@ def merge_attn_stats(parts, q_shape, dtype):
     return out.reshape(b, tq, hq, dh).astype(dtype)
 
 
+def attend_cache_plus_block(q, kk, vv, *, cache_cap, cache_len, q_abs,
+                            window, extra_mask, attn_softcap, impl,
+                            kv_chunk, rolling):
+    """Single-softmax attention over [cache(cap) ++ block(T)] — the
+    decode/verify read path shared by every attention block.
+
+    ``kk``/``vv``: the cache's *logical view* concatenated with the
+    in-flight block's K/V. For a dense cache the logical view is the
+    buffer itself; for a paged cache it is :func:`repro.models.kvcache.
+    pool_view` (page-table-ordered gather), which holds identical values
+    at every committed position, so both layouts produce bit-identical
+    attention (garbage beyond ``cache_len`` is masked the same way).
+
+    ``q_abs``: [Tq] or [B,Tq] absolute position of each query token (tree
+    nodes carry depth-based positions). ``cache_len``: scalar or [B]. Cache
+    slot j of a non-rolling cache holds absolute position j; a rolling cache
+    slot j holds the largest t<cache_len with t % cap == j. ``extra_mask``:
+    [Tq,T_blk] or [B,Tq,T_blk] tree/bidir mask for the in-flight block tail
+    (defaults to causal-in-block by block order).
+    """
+    b, tq = q.shape[:2]
+    total = kk.shape[1]
+    t_blk = total - cache_cap
+    clen = jnp.asarray(cache_len)
+    batched = (clen.ndim > 0) or (jnp.asarray(q_abs).ndim > 1) or (
+        extra_mask is not None and extra_mask.ndim > 2)
+    if batched:
+        clen = jnp.broadcast_to(clen.reshape(-1, 1, 1), (b, 1, 1))
+        qpos = jnp.broadcast_to(
+            jnp.asarray(q_abs).reshape(-1, tq)[..., None], (b, tq, 1))
+        jc = jnp.arange(cache_cap)[None, None, :]
+    else:
+        qpos = jnp.asarray(q_abs)[:, None]                  # [Tq,1]
+        jc = jnp.arange(cache_cap)[None, :]
+    if rolling:
+        last = clen - 1
+        abs_kpos = last - jnp.mod(last - jc, cache_cap)
+        cache_ok = (abs_kpos >= 0) & (abs_kpos < clen) & (abs_kpos <= qpos)
+        if window is not None:
+            cache_ok &= abs_kpos > (qpos - window)
+    else:
+        cache_ok = (jc < clen) & (jc <= qpos)
+        if window is not None:
+            cache_ok &= jc > (qpos - window)
+    tgt_shape = (b, tq, cache_cap) if batched else (tq, cache_cap)
+    cache_ok = jnp.broadcast_to(cache_ok, tgt_shape)
+    if extra_mask is not None:
+        blk = extra_mask
+        if batched and blk.ndim == 2:
+            blk = jnp.broadcast_to(blk[None], (b, tq, t_blk))
+    else:
+        blk = jnp.tril(jnp.ones((tq, t_blk), dtype=bool), k=t_blk - tq)
+        if window is not None:
+            ji = jnp.arange(t_blk)[None, :]
+            ii = jnp.arange(tq)[:, None] + (t_blk - tq)
+            blk = blk & (ji > (ii - window))
+        if batched:
+            blk = jnp.broadcast_to(blk[None], (b, tq, t_blk))
+    full_mask = jnp.concatenate([cache_ok, blk], axis=-1)
+    return attend(q, kk, vv, causal=False, q_offset=0, extra_mask=full_mask,
+                  attn_softcap=attn_softcap, impl=impl, kv_chunk=kv_chunk)
+
+
 def attend(q, k, v, *, causal=True, q_offset=0, window=None, kv_len=None,
            extra_mask=None, scale=None, attn_softcap=None, impl="auto",
            kv_chunk=1024):

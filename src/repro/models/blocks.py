@@ -15,6 +15,12 @@ Modes (driven by arguments, not flags):
   * decode/verify: cache given, write_kv=False  -> attend [cache ++ self]
                    with optional ``extra_mask`` (tree mask); new KV returned
                    to the caller for post-acceptance commit.
+
+KV storage is pluggable per block state (models/kvcache.py): a dense
+[B, cap, H, D] buffer, or — for global layers under ``cache_impl="paged"``
+— a page pool + per-row page table (``"pt"`` key). Reads go through the
+logical page view, writes through the tail-page scatter; both are
+value-identical to the dense layout at every committed position.
 """
 from __future__ import annotations
 
@@ -26,8 +32,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
+from repro.models import kvcache as kvc
 from repro.models import param as pm
-from repro.models.attention import attn_init, project_qkv, out_proj, attend
+from repro.models.attention import (attn_init, project_qkv, out_proj, attend,
+                                    attend_cache_plus_block)
 from repro.models.layers import rmsnorm, rmsnorm_init, dense
 from repro.models.mlp import mlp, mlp_init
 from repro.models import moe as moe_lib
@@ -100,11 +108,28 @@ def block_init(key, cfg: ModelConfig, spec: BlockSpec2):
 
 
 def block_state_init(cfg: ModelConfig, spec: BlockSpec2, batch: int,
-                     max_len: int, ctx_len: int = 0, dtype=jnp.bfloat16):
-    """Per-layer decoding state."""
+                     max_len: int, ctx_len: int = 0, dtype=jnp.bfloat16,
+                     cache_impl: str = "dense", page_size: int = 64,
+                     pool_pages: int = 0, page_table=None):
+    """Per-layer decoding state.
+
+    cache_impl="paged": *global* attention layers store their KV as a
+    shared page pool [pool_pages, page, Hkv, Dh] plus a per-row page table
+    ``pt`` [B, max_pages] (see models/kvcache.py). Local sliding-window
+    layers keep dense rolling buffers (window-capped capacity; rolling
+    position recovery does not compose with page indirection), and
+    recurrent / rwkv states are untouched.
+    """
     st: Dict[str, Any] = {}
     hkv, dh = cfg.num_kv_heads, cfg.head_dim
-    if spec.kind in ("global", "local"):
+    if spec.kind == "global" and cache_impl == "paged":
+        st["k"] = kvc.init_pool(pool_pages, page_size, hkv, dh, dtype)
+        st["v"] = kvc.init_pool(pool_pages, page_size, hkv, dh, dtype)
+        # copy=True: the wave-level table is shared by every paged cache;
+        # each leaf needs its own buffer or donating the state fails with
+        # "attempt to donate the same buffer twice"
+        st["pt"] = jnp.array(page_table, jnp.int32, copy=True)
+    elif spec.kind in ("global", "local"):
         cap = max_len if spec.kind == "global" else min(max_len, _window_cap(cfg))
         st["k"] = jnp.zeros((batch, cap, hkv, dh), dtype)
         st["v"] = jnp.zeros((batch, cap, hkv, dh), dtype)
@@ -171,17 +196,45 @@ def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
                        extra_mask=extra_mask, attn_softcap=cfg.attn_softcap,
                        impl=attn_impl, kv_chunk=kv_chunk)
         else:
-            cap = state["k"].shape[1]
+            paged = kvc.is_paged(state)
             rolling = spec.kind == "local"
+
+            def cache_view():
+                """Logical [B, cap, H, D] K/V view of this block's cache
+                (the pool gathered in page-table order when paged)."""
+                if paged:
+                    ck = kvc.pool_view(state["k"], state["pt"])
+                    cv = kvc.pool_view(state["v"], state["pt"])
+                else:
+                    ck, cv = state["k"], state["v"]
+                return ck.astype(k.dtype), cv.astype(v.dtype)
+
+            def write_cache(buf_key, new):
+                """Append ``new`` at cache_len: tail-page scatter (paged)
+                or contiguous slice write / rolling scatter (dense)."""
+                if not paged:
+                    return _scatter_kv(state[buf_key], new, cache_len,
+                                       rolling, write_len=snap_at)
+                t = new.shape[1]
+                clen = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1),
+                                        (new.shape[0],))
+                pos = clen[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+                valid = (jnp.arange(t)[None, :] < snap_at[:, None]
+                         if snap_at is not None else None)
+                return kvc.pool_scatter(state[buf_key], state["pt"], new,
+                                        pos, valid=valid)
+
+            cap = (kvc.logical_len(state) if paged else state["k"].shape[1])
             if write_kv:
                 if attend_cache_on_write:
                     # replay-commit: attend [cache ++ block], then write
-                    kk = jnp.concatenate([state["k"].astype(k.dtype), k], 1)
-                    vv = jnp.concatenate([state["v"].astype(v.dtype), v], 1)
+                    ck, cv = cache_view()
+                    kk = jnp.concatenate([ck, k], 1)
+                    vv = jnp.concatenate([cv, v], 1)
                     q_abs = (positions if positions is not None else
                              jnp.asarray(cache_len)[..., None]
                              + jnp.arange(q.shape[1]))
-                    y = _attend_cache_plus_block(
+                    y = attend_cache_plus_block(
                         q, kk, vv, cache_cap=cap, cache_len=cache_len,
                         q_abs=q_abs, window=window, extra_mask=extra_mask,
                         attn_softcap=cfg.attn_softcap, impl=attn_impl,
@@ -191,10 +244,8 @@ def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
                     y = attend(q, k, v, causal=True, q_offset=0, window=window,
                                attn_softcap=cfg.attn_softcap, impl=attn_impl,
                                kv_chunk=kv_chunk)
-                new_state["k"] = _scatter_kv(state["k"], k, cache_len, rolling,
-                                             write_len=snap_at)
-                new_state["v"] = _scatter_kv(state["v"], v, cache_len, rolling,
-                                             write_len=snap_at)
+                new_state["k"] = write_cache("k", k)
+                new_state["v"] = write_cache("v", v)
             else:
                 # decode/verify: single softmax over [cache ++ self-block]
                 if positions is not None:
@@ -205,7 +256,7 @@ def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
                 y = None
                 from repro.distributed import spdecode
                 axis = spdecode.kv_seq_axis()
-                if axis is not None:
+                if axis is not None and not paged:
                     from repro.distributed.sharding import active_mesh
                     n_shards = dict(zip(active_mesh().axis_names,
                                         active_mesh().devices.shape))[axis]
@@ -221,11 +272,10 @@ def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
                             attn_softcap=cfg.attn_softcap, blk_mask=blk_mask,
                             rolling=rolling, kv_chunk=kv_chunk)
                 if y is None:
-                    kk = jnp.concatenate(
-                        [state["k"].astype(k.dtype), k], axis=1)
-                    vv = jnp.concatenate(
-                        [state["v"].astype(v.dtype), v], axis=1)
-                    y = _attend_cache_plus_block(
+                    ck, cv = cache_view()
+                    kk = jnp.concatenate([ck, k], axis=1)
+                    vv = jnp.concatenate([cv, v], axis=1)
+                    y = attend_cache_plus_block(
                         q, kk, vv, cache_cap=cap, cache_len=cache_len,
                         q_abs=q_abs, window=window, extra_mask=extra_mask,
                         attn_softcap=cfg.attn_softcap, impl=attn_impl,
@@ -305,56 +355,6 @@ def _scatter_kv(buf, new, start, rolling: bool, write_len=None):
     return buf.at[bidx, idx].set(new, mode="drop")
 
 
-def _attend_cache_plus_block(q, kk, vv, *, cache_cap, cache_len, q_abs,
-                             window, extra_mask, attn_softcap, impl,
-                             kv_chunk, rolling):
-    """Single-softmax attention over [cache(cap) ++ block(T)].
-
-    ``q_abs``: [Tq] or [B,Tq] absolute position of each query token (tree
-    nodes carry depth-based positions). ``cache_len``: scalar or [B]. Cache
-    slot j of a non-rolling cache holds absolute position j; a rolling cache
-    slot j holds the largest t<cache_len with t % cap == j. ``extra_mask``:
-    [Tq,T_blk] or [B,Tq,T_blk] tree/bidir mask for the in-flight block tail
-    (defaults to causal-in-block by block order).
-    """
-    b, tq = q.shape[:2]
-    total = kk.shape[1]
-    t_blk = total - cache_cap
-    clen = jnp.asarray(cache_len)
-    batched = (clen.ndim > 0) or (jnp.asarray(q_abs).ndim > 1) or (
-        extra_mask is not None and extra_mask.ndim > 2)
-    if batched:
-        clen = jnp.broadcast_to(clen.reshape(-1, 1, 1), (b, 1, 1))
-        qpos = jnp.broadcast_to(
-            jnp.asarray(q_abs).reshape(-1, tq)[..., None], (b, tq, 1))
-        jc = jnp.arange(cache_cap)[None, None, :]
-    else:
-        qpos = jnp.asarray(q_abs)[:, None]                  # [Tq,1]
-        jc = jnp.arange(cache_cap)[None, :]
-    if rolling:
-        last = clen - 1
-        abs_kpos = last - jnp.mod(last - jc, cache_cap)
-        cache_ok = (abs_kpos >= 0) & (abs_kpos < clen) & (abs_kpos <= qpos)
-        if window is not None:
-            cache_ok &= abs_kpos > (qpos - window)
-    else:
-        cache_ok = (jc < clen) & (jc <= qpos)
-        if window is not None:
-            cache_ok &= jc > (qpos - window)
-    tgt_shape = (b, tq, cache_cap) if batched else (tq, cache_cap)
-    cache_ok = jnp.broadcast_to(cache_ok, tgt_shape)
-    if extra_mask is not None:
-        blk = extra_mask
-        if batched and blk.ndim == 2:
-            blk = jnp.broadcast_to(blk[None], (b, tq, t_blk))
-    else:
-        blk = jnp.tril(jnp.ones((tq, t_blk), dtype=bool), k=t_blk - tq)
-        if window is not None:
-            ji = jnp.arange(t_blk)[None, :]
-            ii = jnp.arange(tq)[:, None] + (t_blk - tq)
-            blk = blk & (ji > (ii - window))
-        if batched:
-            blk = jnp.broadcast_to(blk[None], (b, tq, t_blk))
-    full_mask = jnp.concatenate([cache_ok, blk], axis=-1)
-    return attend(q, kk, vv, causal=False, q_offset=0, extra_mask=full_mask,
-                  attn_softcap=attn_softcap, impl=impl, kv_chunk=kv_chunk)
+# Back-compat alias: the cache++block read path moved to
+# repro.models.attention (one home for every attention impl).
+_attend_cache_plus_block = attend_cache_plus_block

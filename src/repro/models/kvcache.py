@@ -1,13 +1,43 @@
-"""KV cache + drafter feature cache: functional, sharded, fixed-capacity.
+"""KV-cache storage layer: dense contiguous caches + the paged subsystem.
 
-Layout: k/v ``[B, S_max, Hkv, Dh]`` per layer group (stacked over scanned
-layers as leading axis ``[L, B, S_max, Hkv, Dh]``); ``length`` is a scalar
-int32 (uniform across batch — the serving engine aligns requests per wave;
-ragged batching is handled above this layer by the engine's slot map).
+Two interchangeable storage layouts back every KV-shaped cache in the
+engine (target global-attention KV and the drafter feature caches), keyed
+by ``cache_impl``:
+
+* ``dense`` — the original layout: per-row contiguous ``[B, S_max, H, D]``
+  buffers (stacked over scanned layers / drafter layers as a leading axis).
+  Every row reserves worst-case ``S_max`` positions for its lifetime.
+* ``paged`` — a **page pool**: one shared buffer of ``pool_pages``
+  fixed-size pages ``[P, page, H, D]`` plus a per-row page table
+  ``pt [B, max_pages]`` mapping logical page ``j`` of row ``b`` to a
+  physical page id. Rows own only the pages a host-side :class:`PagePool`
+  allocated to them, so a serving wave reserves memory proportional to the
+  *live requests'* lengths instead of ``B * S_max``, retiring a request
+  frees its pages, and installing a new request into a slot touches only
+  its freshly allocated pages plus one page-table row (no full-state copy).
+
+A paged cache dict is recognized structurally by the presence of the
+``"pt"`` key next to ``"k"``/``"v"`` — callers branch on
+:func:`is_paged` instead of threading a mode flag through every layer.
+
+Semantics contract (what keeps dense and paged token-identical): the
+*logical view* of a paged cache — :func:`pool_view`, physical pages
+gathered in page-table order — holds exactly the same values at every
+committed position as the dense cache would; positions at or beyond the
+row ``length`` are garbage in both layouts and are masked identically by
+the attention mask (``kpos < cache_len``), so softmax results agree
+bit-for-bit. Writes go through :func:`pool_scatter`, which translates
+logical positions to ``(physical page, slot)`` pairs and drops
+out-of-allocation writes (``mode="drop"``), touching only the tail
+page(s) being appended to.
+
+Local (sliding-window) layers keep their dense rolling buffers in both
+modes: their capacity is already window-capped and the rolling position
+recovery does not compose with page indirection.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +85,185 @@ def constrain_cache(cache, kv_seq_sharded: bool = False):
     return out
 
 
+# ===========================================================================
+# Paged subsystem
+# ===========================================================================
+
+def is_paged(cache_dict) -> bool:
+    """A cache/state dict is paged iff it carries a page table."""
+    return isinstance(cache_dict, dict) and "pt" in cache_dict
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache positions."""
+    return -(-int(n_tokens) // int(page_size))
+
+
+def page_geometry(cache_dict):
+    """(page_size, max_pages, pool_pages) of a paged cache dict."""
+    pool = cache_dict["k"]
+    return pool.shape[-3], cache_dict["pt"].shape[-1], pool.shape[-4]
+
+
+def logical_len(cache_dict) -> int:
+    """Logical per-row capacity (max_pages * page_size) of a paged dict."""
+    page, max_pages, _ = page_geometry(cache_dict)
+    return page * max_pages
+
+
+def identity_page_table(batch: int, max_pages: int) -> jnp.ndarray:
+    """[B, max_pages] table where row ``b`` owns pages
+    [b*max_pages, (b+1)*max_pages) — the allocator-free layout used by
+    ``generate`` / ``generate_ondevice`` (uniform waves, no churn)."""
+    return (jnp.arange(batch, dtype=jnp.int32)[:, None] * max_pages
+            + jnp.arange(max_pages, dtype=jnp.int32)[None, :])
+
+
+def default_page_layout(batch: int, max_len: int, page_size: int,
+                        pool_pages=None, page_table=None):
+    """Single source of truth for paged-cache sizing defaults.
+
+    Returns ``(pool_pages, page_table)`` with the identity layout filled
+    in wherever the caller left None — every paged cache of a wave (target
+    KV pools and both feature caches) must derive its geometry through
+    this one rule or their page-id spaces silently diverge.
+    """
+    mp = pages_for(max_len, page_size)
+    if page_table is None:
+        page_table = identity_page_table(batch, mp)
+    if pool_pages is None:
+        pool_pages = batch * mp
+    return pool_pages, page_table
+
+
+def init_pool(pool_pages: int, page_size: int, num_kv_heads: int,
+              head_dim: int, dtype=jnp.bfloat16, lead: tuple = ()):
+    """Zeroed K or V page pool [*lead, P, page, Hkv, Dh] (lead = stacked
+    layer axes: drafter layers or scanned periods)."""
+    return jnp.zeros((*lead, pool_pages, page_size, num_kv_heads, head_dim),
+                     dtype)
+
+
+def _norm_table(table):
+    """Page tables are replicated over stacked-layer axes for threading
+    convenience; physical indexing always uses one copy [B, max_pages]."""
+    while table.ndim > 2:
+        table = table[0]
+    return table
+
+
+def pool_view(pool, table):
+    """Gather the logical per-row view of a page pool.
+
+    pool [P, page, H, D] (or stacked [L, P, page, H, D]);
+    table [B, max_pages] (stacked copies accepted) ->
+    [B, MP*page, H, D] (or [L, B, MP*page, H, D]).
+
+    Out-of-range table entries (the ``pool_pages`` sentinel marking
+    unallocated logical pages) clamp to the last physical page; the
+    garbage they surface sits at logical positions >= the row length and
+    is masked by every consumer. This is the jnp reference read path; the
+    Pallas cascade kernel reads the pool in place via a page-table
+    index_map instead (kernels/cascade_attention.py).
+    """
+    table = _norm_table(table)
+    b, mp = table.shape
+    if pool.ndim == 4:
+        v = pool[table]                          # [B, MP, page, H, D]
+        return v.reshape(b, mp * v.shape[2], *v.shape[3:])
+    v = pool[:, table]                           # [L, B, MP, page, H, D]
+    return v.reshape(v.shape[0], b, mp * v.shape[3], *v.shape[4:])
+
+
+def pool_scatter(pool, table, new, pos, valid=None):
+    """Write ``new`` at logical positions ``pos`` of each row's paged
+    stream — the paged analogue of a tail ``dynamic_update_slice``.
+
+    pool: [P, page, H, D] or stacked [L, P, page, H, D]
+    table: [B, max_pages] (stacked copies accepted)
+    new:  [B, T, H, D] or [L, B, T, H, D] matching ``pool``
+    pos:  [B, T] logical positions; valid: optional [B, T] bool — entries
+          that are False (or whose position falls outside the row's table)
+          are dropped, never written.
+
+    Only the page(s) covering ``pos`` are touched; distinct rows own
+    disjoint physical pages (PagePool invariant), so the scatter has no
+    duplicate indices and is deterministic.
+    """
+    table = _norm_table(table)
+    page = pool.shape[-3]
+    n_phys = pool.shape[-4]
+    mp = table.shape[-1]
+    pos = jnp.asarray(pos, jnp.int32)
+    pidx = pos // page
+    slot = pos % page
+    ok = (pos >= 0) & (pidx < mp)
+    if valid is not None:
+        ok &= valid
+    phys = jnp.take_along_axis(table, jnp.clip(pidx, 0, mp - 1), axis=1)
+    phys = jnp.where(ok, phys, n_phys)           # out of range -> dropped
+    new = new.astype(pool.dtype)
+    if pool.ndim == 4:
+        return pool.at[phys, slot].set(new, mode="drop")
+    return pool.at[:, phys, slot].set(new, mode="drop")
+
+
+class PagePool:
+    """Host-side free-list allocator over one wave's physical page space.
+
+    Pages are interchangeable (no fragmentation): ``alloc`` pops any free
+    ids, ``free`` returns them. The serving engine allocates a request's
+    worst-case page count at admission (install) and frees it at retire,
+    so admission control is one integer comparison against
+    :attr:`free_pages` instead of a per-slot ``max_len`` reservation.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._free_set = set(self._free)     # O(1) double-free detection
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` free page ids; None (no partial grant) if short."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(pages)
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.n_pages and p not in self._free_set, \
+                f"double free / foreign page {p}"
+            self._free.append(p)
+            self._free_set.add(p)
+
+    def row_table(self, pages: Sequence[int], max_pages: int):
+        """[max_pages] int32 row table: allocated pages first, then the
+        out-of-range sentinel (``n_pages``) marking unallocated slots —
+        reads clamp+mask, writes drop."""
+        import numpy as np
+        t = np.full((max_pages,), self.n_pages, np.int32)
+        t[: len(pages)] = pages
+        return t
+
+
 # --------------------------------------------------------------------------
 # Drafter feature cache: projected target features consumed as K/V by every
 # drafter layer (DFlash KV injection). Stored post-projection per drafter
-# layer: [L_d, B, S_max, Hkv_d, Dh_d] for K and V.
+# layer: [L_d, B, S_max, Hkv_d, Dh_d] for K and V (dense) or as stacked
+# page pools [L_d, P, page, Hkv_d, Dh_d] + one shared page table (paged).
 # --------------------------------------------------------------------------
 
 def init_feature_cache(num_layers: int, batch: int, max_len: int,

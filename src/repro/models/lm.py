@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
+from repro.models import kvcache
 from repro.models import param as pm
 from repro.models.blocks import (BlockSpec2, block_apply, block_init,
                                  block_state_init, period_spec)
@@ -47,18 +48,35 @@ def lm_init(key, cfg: ModelConfig):
 
 
 def init_states(cfg: ModelConfig, batch: int, max_len: int, ctx_len: int = 0,
-                dtype=jnp.bfloat16):
+                dtype=jnp.bfloat16, cache_impl: str = "dense",
+                page_size: int = 64, pool_pages: Optional[int] = None,
+                page_table=None):
+    """Allocate per-layer decode states.
+
+    cache_impl="paged": global-attention KV lives in page pools shared
+    across the batch; ``page_table`` [B, max_pages] maps each row's
+    logical pages to physical pool pages (default: the identity layout,
+    ``pool_pages = batch * ceil(max_len/page_size)``). The table is
+    replicated into every paged block state (tiny int32) so the scanned
+    stack threads it with no extra forward arguments.
+    """
     spec, n_periods, tail = period_spec(cfg)
+    if cache_impl == "paged":
+        pool_pages, page_table = kvcache.default_page_layout(
+            batch, max_len, page_size, pool_pages, page_table)
+    kw = dict(cache_impl=cache_impl, page_size=page_size,
+              pool_pages=pool_pages or 0, page_table=page_table)
     states: Dict[str, Any] = {}
     if n_periods > 0:
         for j, bs in enumerate(spec):
-            one = block_state_init(cfg, bs, batch, max_len, ctx_len, dtype)
+            one = block_state_init(cfg, bs, batch, max_len, ctx_len, dtype,
+                                   **kw)
             states[f"p{j}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy()
                 if n_periods > 1 else a[None], one)
     for i, bs in enumerate(tail):
         states[f"tail{i}"] = block_state_init(cfg, bs, batch, max_len,
-                                              ctx_len, dtype)
+                                              ctx_len, dtype, **kw)
     states["length"] = jnp.zeros((batch,), jnp.int32)
     return states
 
@@ -286,8 +304,8 @@ def commit_kv(states, kv_outs, cfg: ModelConfig, path_idx, n_commit):
             return state
         k, v = kv                                  # [(n,) B, T_tree, H, D]
         st = dict(state)
-        cap = st["k"].shape[-3]
-        stacked = st["k"].ndim == 5
+        paged = kvcache.is_paged(st)
+        stacked = k.ndim == 5
         tree_ax = 2 if stacked else 1
         idx_g = path_idx
         if stacked:
@@ -299,6 +317,17 @@ def commit_kv(states, kv_outs, cfg: ModelConfig, path_idx, n_commit):
         # write positions: per-example length + 0..P-1 (mod cap if rolling);
         # invalid entries pushed out of bounds -> dropped by scatter
         wpos = length[:, None] + jnp.arange(p)[None, :]
+        if paged:
+            # page-wise commit: only the tail page(s) covering
+            # [length, length+n_commit) are written; the page table is
+            # untouched (allocation is fixed for the request's lifetime,
+            # so masked rows trivially freeze their tables)
+            st["k"] = kvcache.pool_scatter(st["k"], st["pt"], k_path, wpos,
+                                           valid=valid)
+            st["v"] = kvcache.pool_scatter(st["v"], st["pt"], v_path, wpos,
+                                           valid=valid)
+            return st
+        cap = st["k"].shape[-3]
         if rolling:
             wpos = jnp.mod(wpos, cap)
         wpos = jnp.where(valid, wpos, cap + 1)

@@ -1,13 +1,15 @@
-"""Batched D2SD serving engine: continuous slot-refill batching.
+"""Batched D2SD serving engine: continuous slot-refill batching over a
+pluggable KV storage layer.
 
 Requests queue up and are served FIFO through a fixed-size batch of row
 *slots* over one typed :class:`~repro.core.state.EngineState`:
 
 * **Per-slot prefill** — each request is prefilled independently into its
-  row via :func:`~repro.core.state.prefill_row` (a batch-1 prefill spliced
-  in with :meth:`EngineState.adopt_row`), so one running batch mixes
-  arbitrary prompt lengths AND arbitrary ``max_new`` budgets; there are no
-  uniform-prompt-length waves.
+  row via :func:`~repro.core.state.install_row` (a batch-1 prefill merged
+  in with :meth:`EngineState.adopt_row` under a donated ``jit``, so the
+  splice lowers to an in-place row write instead of a full-state copy),
+  letting one running batch mix arbitrary prompt lengths AND arbitrary
+  ``max_new`` budgets; there are no uniform-prompt-length waves.
 * **Early-exit masking** — before every decode cycle the engine pushes a
   per-row ``active`` mask into the state; rows whose request already hit
   its budget (or whose slot is idle) draft a degenerate root-only tree and
@@ -19,12 +21,29 @@ Requests queue up and are served FIFO through a fixed-size batch of row
   ``refill=False`` to get drain-the-wave batching for A/B comparison; see
   ``benchmarks/serving_bench.py``).
 
+KV memory (``cache_impl``):
+
+* ``dense`` — every slot reserves the worst-case ``max_len`` of the wave's
+  candidate set for its whole lifetime.
+* ``paged`` — one :class:`~repro.models.kvcache.PagePool` per wave backs
+  the target global-attention KV and both drafter feature caches.
+  **Admission accounts in pages**: a request needs
+  ``ceil(cache_needed / page_size)`` pages and is adopted iff that many
+  pages are free — not iff a dense ``max_len`` row is. **Retire frees its
+  pages** back to the pool, and **slot refill is copy-free**: install
+  allocates pages, prefills straight into them through a pool-sharing
+  batch-1 view, and patches one page-table row (see
+  :func:`~repro.core.state.row_template`). Per-request token output is
+  identical across both impls (asserted by the serving bench).
+
 The per-cycle :meth:`ServingEngine.step` API owns ONE decode cycle, so the
 host loop can interleave submissions, refills, and stats collection.
 Aggregate stats track tokens actually committed per request
 (``min(filled, max_new)``), acceptance ``alpha`` over *active* row-cycles
-only, and ``wasted_row_cycles`` — cycles a batch row spent without a live,
-unfinished request (the quantity early-exit + refill minimizes).
+only, ``wasted_row_cycles``, and the KV-memory counters:
+``refill_copy_bytes`` (accounting model of bytes written per install,
+:func:`~repro.core.state.refill_copy_bytes`), ``pool_pages`` /
+``pool_peak_pages`` and the per-cycle mean ``pool_utilization``.
 """
 from __future__ import annotations
 
@@ -37,7 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pipeline as pl
-from repro.core.state import EngineState, prefill_row
+from repro.core.state import EngineState, install_row, refill_copy_bytes
+from repro.models import kvcache as kvc
 
 
 @dataclasses.dataclass
@@ -61,6 +81,8 @@ class Wave:
     targets: np.ndarray         # [B] per-request max_new (0 for idle slots)
     t0: float
     cycles: int = 0
+    pool: Optional[kvc.PagePool] = None        # paged mode only
+    row_pages: Optional[List[List[int]]] = None  # slot -> allocated pages
 
     @property
     def done(self) -> bool:
@@ -70,11 +92,26 @@ class Wave:
 class ServingEngine:
     def __init__(self, bundle: pl.SpecBundle, batch_size: int = 8,
                  seed: int = 0, early_exit: bool = True,
-                 refill: bool = True):
+                 refill: bool = True, cache_impl: str = "dense",
+                 page_size: int = 64):
+        assert cache_impl in ("dense", "paged"), cache_impl
+        if cache_impl == "paged" and not early_exit:
+            # a retired slot's pages return to the pool but its stale page
+            # table survives until refill; without early-exit masking the
+            # idle row would keep committing KV through that table into
+            # pages the allocator may have granted to a live request —
+            # silent cross-request corruption. The legacy all-rows-run
+            # configuration exists only for dense A/B benchmarking.
+            raise ValueError(
+                "cache_impl='paged' requires early_exit=True: idle slots "
+                "must be masked so they cannot write through stale page "
+                "tables into freed (reallocated) pages")
         self.bundle = bundle
         self.batch_size = batch_size
         self.early_exit = early_exit
         self.refill = refill
+        self.cache_impl = cache_impl
+        self.page_size = page_size
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
@@ -85,9 +122,14 @@ class ServingEngine:
                                                  collect_stats=False)
         self.stats = {"tokens": 0, "cycles": 0, "accepted": 0,
                       "wall_s": 0.0, "waves": 0, "alpha": 0.0,
-                      "wasted_row_cycles": 0, "refills": 0}
+                      "wasted_row_cycles": 0, "refills": 0,
+                      "refill_copy_bytes": 0, "installs": 0,
+                      "pool_pages": 0, "pool_peak_pages": 0,
+                      "pool_utilization": 0.0}
         self._alpha_num = 0
         self._alpha_den = 0
+        self._util_sum = 0.0
+        self._util_samples = 0
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
         # Monotonic uid: len(queue)+len(done) would collide once a wave
@@ -122,17 +164,50 @@ class ServingEngine:
         # don't fit simply wait for the next wave (see _fits)
         cand = reqs + self.queue[: self.batch_size]
         cap = max(self._bufs_needed(r, g) for r in cand)
-        max_len = max(self._cache_needed(r, g) for r in cand)
-        state = pl.engine_init(self.bundle, b, max_len)
+        pool = None
+        row_pages = None
+        if self.cache_impl == "paged":
+            # page-granular sizing: the table is as wide as the largest
+            # candidate needs, but the POOL holds only the worst-case
+            # concurrent set (sum of the b largest candidates) — less
+            # than the dense b * max_len reservation whenever request
+            # sizes are mixed
+            need = sorted((self._pages_needed(r, g) for r in cand),
+                          reverse=True)
+            mp = need[0]
+            pool_pages = sum(need[:b])
+            pool = kvc.PagePool(pool_pages, self.page_size)
+            row_pages = [[] for _ in range(b)]
+            # all rows start unallocated: table rows hold the out-of-range
+            # sentinel until _install patches them
+            table = np.full((b, mp), pool_pages, np.int32)
+            state = pl.engine_init(self.bundle, b, mp * self.page_size,
+                                   cache_impl="paged",
+                                   page_size=self.page_size,
+                                   pool_pages=pool_pages, page_table=table)
+            # lifetime max, matching pool_peak_pages' scope — a small
+            # leftover wave must not shrink the reported pool below the
+            # peak measured in an earlier, larger wave
+            self.stats["pool_pages"] = max(self.stats["pool_pages"],
+                                           pool_pages)
+        else:
+            max_len = max(self._cache_needed(r, g) for r in cand)
+            state = pl.engine_init(self.bundle, b, max_len)
         state = state.replace(active=jnp.zeros((b,), bool))
         self.wave = Wave(requests=[None] * b, state=state,
                          bufs=np.zeros((b, cap), np.int32),
                          filled=np.zeros((b,), np.int64),
                          targets=np.zeros((b,), np.int64),
-                         t0=time.time())
+                         t0=time.time(), pool=pool, row_pages=row_pages)
+        # two passes: install EVERY initial request before the first retire.
+        # A retire can chain-refill from beyond the pool-sizing candidate
+        # window; interleaving it with the initial installs could hand those
+        # refills pages the pool only guarantees for the initial set.
         for i, r in enumerate(reqs):
             self._install(i, r)
-            if self.wave.filled[i] >= self.wave.targets[i]:
+        for i in range(b):
+            if (self.wave.requests[i] is not None
+                    and self.wave.filled[i] >= self.wave.targets[i]):
                 # satisfied by the prefill alone (max_new <= 1): retire
                 # (and possibly refill) without paying a decode cycle
                 self._retire(i)
@@ -141,11 +216,28 @@ class ServingEngine:
         return True
 
     def _install(self, slot: int, r: Request) -> None:
-        """Prefill ``r`` into ``slot`` of the running batch (slot refill)."""
+        """Prefill ``r`` into ``slot`` of the running batch (slot refill).
+
+        The donated :func:`install_row` consumes the old wave state, so
+        the splice / page writes happen in place — no full-state copy in
+        either impl. Paged mode additionally allocates the request's
+        pages here (freed again by :meth:`_retire`).
+        """
         w = self.wave
         self.key, sub = jax.random.split(self.key)
-        w.state = prefill_row(self.bundle, w.state, slot, r.prompt, key=sub,
-                              temperature=self.bundle.spec.temperature)
+        row_table = None
+        if self.cache_impl == "paged":
+            g = self.bundle.spec.gamma
+            pages = w.pool.alloc(self._pages_needed(r, g))
+            assert pages is not None, "admission control must guarantee pages"
+            w.row_pages[slot] = pages
+            row_table = w.pool.row_table(pages, w.state.max_pages)
+        self.stats["refill_copy_bytes"] += refill_copy_bytes(
+            w.state, len(r.prompt))
+        self.stats["installs"] += 1
+        w.state = install_row(self.bundle, w.state, slot, r.prompt, key=sub,
+                              temperature=self.bundle.spec.temperature,
+                              row_table=row_table)
         w.bufs[slot] = 0
         w.bufs[slot, 0] = int(np.asarray(w.state.anchor)[slot])
         w.filled[slot] = 1
@@ -166,12 +258,20 @@ class ServingEngine:
         (the same sizing rule as ``generate``'s default max_len)."""
         return len(r.prompt) + r.max_new + 2 * g + 8
 
+    def _pages_needed(self, r: Request, g: int) -> int:
+        return kvc.pages_for(self._cache_needed(r, g), self.page_size)
+
     def _fits(self, r: Request) -> bool:
-        """Can ``r`` be adopted into the current wave's allocation?"""
+        """Can ``r`` be adopted into the current wave's allocation?
+        Paged mode admits on free *pages*, not a per-slot max_len row."""
         w = self.wave
         g = self.bundle.spec.gamma
-        return (self._bufs_needed(r, g) <= w.bufs.shape[1]
-                and self._cache_needed(r, g) <= w.state.max_len)
+        if self._bufs_needed(r, g) > w.bufs.shape[1]:
+            return False
+        if self.cache_impl == "paged":
+            n = self._pages_needed(r, g)
+            return n <= w.state.max_pages and n <= w.pool.free_pages
+        return self._cache_needed(r, g) <= w.state.max_len
 
     def _host_active(self) -> np.ndarray:
         """[B] rows holding a request that still wants tokens."""
@@ -206,6 +306,9 @@ class ServingEngine:
         n_out = np.asarray(out["n_out"])
         cap = w.bufs.shape[1]
         w.cycles += 1
+        if w.pool is not None:
+            self._util_sum += w.pool.pages_in_use / max(w.pool.n_pages, 1)
+            self._util_samples += 1
         # stats: only rows that were actively serving a request count
         # toward acceptance; the rest are wasted batch capacity
         self.stats["wasted_row_cycles"] += int(b - active.sum())
@@ -242,6 +345,11 @@ class ServingEngine:
             self.stats["tokens"] += int(min(w.filled[slot], r.max_new))
             w.requests[slot] = None
             w.targets[slot] = 0
+            if w.pool is not None and w.row_pages[slot]:
+                # free before the refill below so the incoming request can
+                # reuse this row's pages immediately
+                w.pool.free(w.row_pages[slot])
+                w.row_pages[slot] = []
             if not (self.refill and self.queue
                     and self._fits(self.queue[0])):
                 return
@@ -260,6 +368,12 @@ class ServingEngine:
         self.stats["waves"] += 1
         self.stats["alpha"] = (self._alpha_num / self._alpha_den
                                if self._alpha_den else 0.0)
+        if w.pool is not None:
+            self.stats["pool_peak_pages"] = max(
+                self.stats["pool_peak_pages"], w.pool.peak_in_use)
+            self.stats["pool_utilization"] = (
+                self._util_sum / self._util_samples
+                if self._util_samples else 0.0)
         self.wave = None
 
     # ----------------------------------------------------- drain loop -----

@@ -8,6 +8,10 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels import flash_attention as fa
 
+# These kernels TARGET TPU; on this CPU-only container they execute in
+# Pallas interpret mode (see pytest.ini for the marker contract).
+pytestmark = pytest.mark.pallas
+
 
 def _rand(key, shape, dtype):
     return jax.random.normal(key, shape, jnp.float32).astype(dtype)
@@ -118,6 +122,128 @@ def test_cascade_matches_ref(case):
     np.testing.assert_allclose(np.asarray(o, np.float32),
                                np.asarray(o_ref, np.float32),
                                rtol=tol, atol=tol)
+
+
+# Ragged + sliding-window sweep at page-aligned and page-straddling cache
+# lengths (the boundaries the paged layout makes interesting; bk=64 below
+# doubles as the page size so "aligned" means a block/page boundary).
+RAGGED_CASES = [
+    # (cache_lens, window, rolling)
+    ((512, 256), None, False),        # page-aligned, ragged batch
+    ((505, 250), None, False),        # page-straddling, ragged batch
+    ((512, 256), 96, False),          # aligned + sliding window
+    ((505, 131), 96, False),          # straddling + sliding window
+    ((505, 250), 200, True),          # straddling + window + rolling buffer
+]
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+def test_cascade_ragged_window_boundaries(case):
+    """Dense cascade kernel vs oracle on per-example cache lengths that sit
+    exactly on / just off KV-block boundaries, with sliding windows."""
+    cache_lens, window, rolling = case
+    b, hq, hkv, tq, s, d = len(cache_lens), 4, 2, 10, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(42), 5)
+    q = _rand(ks[0], (b, hq, tq, d), jnp.float32)
+    ck = _rand(ks[1], (b, hkv, s, d), jnp.float32)
+    cv = _rand(ks[2], (b, hkv, s, d), jnp.float32)
+    bk = _rand(ks[3], (b, hkv, tq, d), jnp.float32)
+    bv = _rand(ks[4], (b, hkv, tq, d), jnp.float32)
+    cache_len = jnp.asarray(cache_lens)
+    q_abs = cache_len[:, None] + jnp.arange(tq)[None, :]
+    tree_mask = jnp.tril(jnp.ones((tq, tq), bool))
+    o = ops.cascade_attention(q, ck, cv, bk, bv, cache_len=cache_len,
+                              q_abs=q_abs, tree_mask=tree_mask,
+                              window=window, rolling=rolling, n_splits=4,
+                              bk=64, interpret=True, layout="BHTD")
+    o_ref = ref.cascade_attention_ref(
+        q, ck, cv, bk, bv, cache_len=cache_len, q_abs=q_abs,
+        tree_mask=tree_mask, window=window, rolling=rolling)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=3e-5, atol=3e-5)
+
+
+PAGED_CASES = [
+    # (B, Hq, Hkv, Tq, page, mp, n_phys, cache_lens, window)
+    (2, 4, 2, 12, 64, 8, 20, (512, 256), None),     # page-aligned
+    (2, 4, 2, 12, 64, 8, 20, (505, 250), None),     # page-straddling
+    (2, 4, 2, 12, 64, 8, 20, (505, 131), 100),      # straddling + window
+    (1, 8, 2, 16, 128, 4, 7, (333,), None),         # GQA 4, odd pool
+    (3, 2, 2, 8, 32, 6, 24, (192, 100, 65), 64),    # 3-way ragged + window
+    (2, 4, 2, 8, 64, 7, 15, (410, 230), None),      # PRIME max_pages:
+    # the table pads to keep 4-way split-K instead of collapsing to 1
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_cascade_paged_matches_ref(case):
+    """Paged cascade kernel (scalar-prefetch page-table index_map) vs the
+    gather-then-dense oracle, over shuffled disjoint page tables with
+    unallocated sentinel tails."""
+    b, hq, hkv, tq, page, mp, n_phys, cache_lens, window = case
+    d = 64
+    rng = np.random.default_rng(hash(case) % 2 ** 31)
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2 ** 31), 5)
+    q = _rand(ks[0], (b, hq, tq, d), jnp.float32)
+    pk = _rand(ks[1], (n_phys, hkv, page, d), jnp.float32)
+    pv = _rand(ks[2], (n_phys, hkv, page, d), jnp.float32)
+    bk = _rand(ks[3], (b, hkv, tq, d), jnp.float32)
+    bv = _rand(ks[4], (b, hkv, tq, d), jnp.float32)
+    # disjoint shuffled page tables sized to each row's cache length;
+    # unallocated logical pages carry the out-of-range sentinel
+    perm = list(rng.permutation(n_phys))
+    pt = np.full((b, mp), n_phys, np.int32)
+    for i, cl in enumerate(cache_lens):
+        need = -(-int(cl) // page)
+        pt[i, :need] = [perm.pop() for _ in range(need)]
+    cache_len = jnp.asarray(cache_lens)
+    q_abs = cache_len[:, None] + jnp.arange(tq)[None, :]
+    tree_mask = jnp.tril(jnp.ones((tq, tq), bool))
+    o = ops.cascade_attention_paged(
+        q, pk, pv, jnp.asarray(pt), bk, bv, cache_len=cache_len,
+        q_abs=q_abs, tree_mask=tree_mask, window=window, n_splits=4,
+        interpret=True, layout="BHTD")
+    o_ref = ref.cascade_attention_paged_ref(
+        q, pk, pv, jnp.asarray(pt), bk, bv, cache_len=cache_len,
+        q_abs=q_abs, tree_mask=tree_mask, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_cascade_paged_equals_engine_view():
+    """Paged kernel on engine-layout pools == the model's decode read path
+    (pool_view gather + attend_cache_plus_block) on the same paged state —
+    ties the kernel to the storage subsystem that feeds it."""
+    from repro.models import kvcache as kvc
+    from repro.models.attention import attend_cache_plus_block
+    b, hq, hkv, tq, page, mp, d = 2, 4, 2, 8, 32, 4, 64
+    n_phys = b * mp
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    # engine storage layout: [P, page, Hkv, D]
+    pk = _rand(ks[0], (n_phys, page, hkv, d), jnp.float32)
+    pv = _rand(ks[1], (n_phys, page, hkv, d), jnp.float32)
+    q = _rand(ks[2], (b, tq, hq, d), jnp.float32)        # BTHD
+    bk = _rand(ks[3], (b, tq, hkv, d), jnp.float32)
+    bv = _rand(ks[4], (b, tq, hkv, d), jnp.float32)
+    pt = kvc.identity_page_table(b, mp)
+    cache_len = jnp.array([mp * page - 5, 70])
+    q_abs = cache_len[:, None] + jnp.arange(tq)[None, :]
+    tree_mask = jnp.tril(jnp.ones((tq, tq), bool))
+
+    o1 = ops.cascade_attention_paged(
+        q, pk, pv, pt, bk, bv, cache_len=cache_len, q_abs=q_abs,
+        tree_mask=tree_mask, n_splits=2, interpret=True, layout="BTHD")
+    kk = jnp.concatenate([kvc.pool_view(pk, pt), bk], axis=1)
+    vv = jnp.concatenate([kvc.pool_view(pv, pt), bv], axis=1)
+    o2 = attend_cache_plus_block(
+        q, kk, vv, cache_cap=mp * page, cache_len=cache_len, q_abs=q_abs,
+        window=None, extra_mask=tree_mask, attn_softcap=None, impl="dense",
+        kv_chunk=128, rolling=False)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=3e-5, atol=3e-5)
 
 
 def test_cascade_equals_engine_reference():
