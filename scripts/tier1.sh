@@ -2,6 +2,7 @@
 # Tier-1 (fast) test suite — the CI gate every PR must keep green.
 #
 #   scripts/tier1.sh            # == JAX_PLATFORMS=cpu PYTHONPATH=src pytest -x -q
+#   scripts/tier1.sh --fast     # skip slow AND pallas interpret-mode kernels
 #   scripts/tier1.sh tests/test_paged.py   # extra args pass through
 #
 # Pallas kernels run in interpret mode on CPU (pytest marker `pallas`);
@@ -11,4 +12,8 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--fast" ]]; then
+  shift
+  exec python -m pytest -x -q -m "not slow and not pallas" "$@"
+fi
 exec python -m pytest -x -q "$@"

@@ -211,26 +211,58 @@ def engine_init(bundle, batch: int, max_len: int, ctx_len: int = 0,
 
 
 def prefill(bundle, state: EngineState, prompts, key=None, ctx=None,
-            temperature: float = 0.0) -> EngineState:
+            temperature: float = 0.0, true_len=None,
+            start=None) -> EngineState:
     """Process prompts [B, P]; sets anchor = first generated token.
 
     cache_len is passed as a SCALAR 0: prefill always starts at offset 0, so
     the KV write lowers to dynamic-update-slice (partitionable along the
     kv_seq axis with zero communication) instead of a gather-scatter
     (§Perf: this was 2x9.6GB/layer of all-gather on 32k prefill).
+
+    true_len ([B] or scalar, traced): ``prompts`` is padded to a bucketed
+    length and only the first ``true_len`` tokens per row are real — KV
+    writes and feature-cache entries beyond are dropped, recurrent states
+    snapshot at exactly ``true_len`` consumed tokens, the committed
+    ``length`` advances by ``true_len``, and the anchor reads the logits
+    at position ``true_len - 1``. Lets one install trace serve every
+    prompt length in a bucket (O(buckets) compiles, not O(lengths)).
+
+    start ([B] or scalar, traced): warm start — the caches already hold
+    ``start`` committed positions (a prefix-cache hit spliced the shared
+    pages into this row), ``prompts`` is only the *uncached suffix*, and
+    the forward attends [cache ++ suffix] with positions offset by
+    ``start``. Caller must have set the state's lengths to ``start``.
     """
-    out = lm.forward(bundle.target_params, prompts, bundle.target_cfg,
-                     states=state.target, cache_len=jnp.zeros((), jnp.int32),
-                     write_kv=True, ctx=ctx, want_features=True, remat=False)
     b, p = prompts.shape
-    positions = jnp.broadcast_to(jnp.arange(p)[None], (b, p))
+    warm = start is not None
+    if warm:
+        cl = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
+    else:
+        cl = jnp.zeros((), jnp.int32)
+    snap = None
+    if true_len is not None:
+        snap = jnp.broadcast_to(jnp.asarray(true_len, jnp.int32).reshape(-1),
+                                (b,))
+    out = lm.forward(bundle.target_params, prompts, bundle.target_cfg,
+                     states=state.target, cache_len=cl,
+                     write_kv=True, snap_at=snap, attend_cache_on_write=warm,
+                     ctx=ctx, want_features=True, remat=False)
+    base = cl[:, None] if warm else jnp.zeros((b, 1), jnp.int32)
+    positions = base + jnp.arange(p, dtype=jnp.int32)[None, :]
+    counts = snap if snap is not None else jnp.full((b,), p)
     d1_feat = dr.extend_feat_cache(
         bundle.d1_params, bundle.d1_cfg, state.d1_feat, out["features"],
-        positions, jnp.full((b,), p))
+        positions, counts)
     d2_feat = dr.extend_feat_cache(
         bundle.d2_params, bundle.d2_cfg, state.d2_feat, out["features"],
-        positions, jnp.full((b,), p))
-    last = out["logits"][:, -1].astype(jnp.float32)
+        positions, counts)
+    if snap is None:
+        last = out["logits"][:, -1].astype(jnp.float32)
+    else:
+        last = jnp.take_along_axis(
+            out["logits"], jnp.maximum(snap - 1, 0)[:, None, None],
+            axis=1)[:, 0].astype(jnp.float32)
     if temperature > 0:
         anchor = jax.random.categorical(key, last / temperature)
     else:
@@ -291,20 +323,66 @@ def row_template(state: EngineState, row_table) -> EngineState:
     )
 
 
+def _with_lengths(sub: EngineState, length) -> EngineState:
+    """Batch-1 state with every committed-length leaf set to ``length``
+    (warm install: the spliced shared pages already hold that prefix)."""
+    l1 = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (1,))
+    return sub.replace(target={**sub.target, "length": l1},
+                       d1_feat={**sub.d1_feat, "length": l1},
+                       d2_feat={**sub.d2_feat, "length": l1})
+
+
+def _map_paged_pools(state: EngineState, fn) -> EngineState:
+    """Apply ``fn(pool)`` to the k/v pool of every paged cache dict."""
+    def blk(d):
+        if not kvc.is_paged(d):
+            return d
+        return {**d, "k": fn(d["k"]), "v": fn(d["v"])}
+
+    target = {name: (blk(v) if isinstance(v, dict) else v)
+              for name, v in state.target.items()}
+    return state.replace(target=target, d1_feat=blk(state.d1_feat),
+                         d2_feat=blk(state.d2_feat))
+
+
+def _cow_copy_impl(state: EngineState, src, dst) -> EngineState:
+    return _map_paged_pools(state, lambda p: kvc.copy_page(p, src, dst))
+
+
+_cow_copy_donated = functools.partial(
+    jax.jit, donate_argnames=("state",))(_cow_copy_impl)
+
+
+def cow_copy_page(state: EngineState, src, dst) -> EngineState:
+    """Copy physical page ``src`` -> ``dst`` in EVERY paged pool of the
+    wave (target global-attention KV and both drafter feature caches) —
+    the copy-on-write step of a prefix-cache hit whose matched length
+    ends inside a page. ``state`` is DONATED (in-place page write); one
+    trace per state shapes (``src``/``dst`` are traced)."""
+    assert state.cache_impl == "paged", "COW only exists for paged caches"
+    return _cow_copy_donated(state, jnp.asarray(src, jnp.int32),
+                             jnp.asarray(dst, jnp.int32))
+
+
 def _install_impl(bundle, state, row, prompt, key, row_table,
-                  temperature: float, ctx_len: int):
+                  temperature: float, ctx_len: int, prefix_hit=None,
+                  true_len=None):
     if state.cache_impl == "paged":
         sub = row_template(state, row_table)
     else:
         sub = engine_init(bundle, 1, state.max_len, ctx_len=ctx_len)
+    if prefix_hit is not None:
+        sub = _with_lengths(sub, prefix_hit)
     sub = prefill(bundle, sub, prompt[None, :], key=key,
-                  temperature=temperature)
+                  temperature=temperature, true_len=true_len,
+                  start=prefix_hit)
     return state.adopt_row(row, sub)
 
 
 # Donated install: `state` is consumed — XLA rewrites the row / tail pages
 # in place instead of copying the wave state. One trace per
-# (prompt length, state shapes); `row` and `row_table` are traced.
+# (prompt-bucket length, warm/cold, state shapes); `row`, `row_table`,
+# `prefix_hit` and `true_len` are traced.
 _install_row_donated = functools.partial(
     jax.jit, static_argnames=("temperature", "ctx_len"),
     donate_argnames=("state",))(_install_impl)
@@ -312,24 +390,43 @@ _install_row_donated = functools.partial(
 
 def install_row(bundle, state: EngineState, row, prompt, key=None,
                 temperature: float = 0.0, row_table=None,
-                ctx_len: int = 0) -> EngineState:
+                ctx_len: int = 0, prefix_hit=None,
+                true_len=None) -> EngineState:
     """Serving fast path: prefill ``prompt`` into ``row`` with the input
     ``state`` DONATED (caller must drop its reference). Paged states
     require ``row_table`` (the allocated pages); dense states splice via
-    an in-place row write."""
+    an in-place row write.
+
+    prefix_hit (paged only): number of committed tokens already present
+    in the row's spliced pages (a prefix-cache hit) — ``prompt`` then
+    holds only the *uncached suffix* and the batch-1 prefill runs over
+    it alone, attending to the shared prefix KV. Token-identical to a
+    cold install of the full prompt (asserted by tests/serving bench).
+
+    true_len: real token count when ``prompt`` is padded to a length
+    bucket (see :func:`prefill`).
+    """
     prompt = jnp.asarray(prompt, jnp.int32)
     if state.cache_impl == "paged":
         assert row_table is not None, "paged install needs allocated pages"
         row_table = jnp.asarray(row_table, jnp.int32)
+    else:
+        assert prefix_hit is None, "prefix-cache hits require paged KV"
     key = key if key is not None else jax.random.PRNGKey(0)
+    if prefix_hit is not None:
+        prefix_hit = jnp.asarray(prefix_hit, jnp.int32)
+    if true_len is not None:
+        true_len = jnp.asarray(true_len, jnp.int32)
     return _install_row_donated(bundle, state, jnp.asarray(row, jnp.int32),
                                 prompt, key, row_table,
-                                temperature=temperature, ctx_len=ctx_len)
+                                temperature=temperature, ctx_len=ctx_len,
+                                prefix_hit=prefix_hit, true_len=true_len)
 
 
 def prefill_row(bundle, state: EngineState, row, prompt, key=None, ctx=None,
                 temperature: float = 0.0, ctx_len: int = 0,
-                row_table=None) -> EngineState:
+                row_table=None, prefix_hit=None,
+                true_len=None) -> EngineState:
     """Prefill a single request into one row of an in-flight state
     (non-donating; ``state`` stays valid — see :func:`install_row` for the
     donated serving path).
@@ -347,8 +444,12 @@ def prefill_row(bundle, state: EngineState, row, prompt, key=None, ctx=None,
     if ctx is None:
         return _install_impl(bundle, state, row, prompt,
                              key if key is not None else jax.random.PRNGKey(0),
-                             row_table, temperature, ctx_len)
-    # cross-attention contexts stay on the eager path (ctx shapes vary)
+                             row_table, temperature, ctx_len,
+                             prefix_hit=prefix_hit, true_len=true_len)
+    # cross-attention contexts stay on the eager path (ctx shapes vary);
+    # warm starts / bucketed padding are not plumbed through it
+    assert prefix_hit is None and true_len is None, \
+        "prefix_hit / true_len are not supported with a cross-attention ctx"
     sub = (row_template(state, row_table)
            if state.cache_impl == "paged"
            else engine_init(bundle, 1, state.max_len, ctx_len=ctx_len))

@@ -35,6 +35,15 @@ def main():
                          "pool subsystem (page-granular admission, "
                          "copy-free slot refill)")
     ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: copy-on-write page sharing "
+                         "of committed prefixes across requests (needs "
+                         "--cache-impl paged, all-global-attention target)")
+    ap.add_argument("--bucket-sizes", default=None,
+                    help="comma-separated install-prefill length buckets "
+                         "(bounds donated-install recompiles under varying "
+                         "prompt lengths), e.g. 32,64,128; 'off' forces "
+                         "exact-length installs; default: pow-2 ladder")
     args = ap.parse_args()
 
     if args.random:
@@ -57,17 +66,34 @@ def main():
         bundle = build_bundle(args.mode, gamma=args.gamma, k=args.k,
                               temperature=args.temperature)
 
+    kw = {}
+    if args.bucket_sizes is not None:
+        if args.bucket_sizes.strip().lower() in ("off", "none"):
+            kw["bucket_sizes"] = None
+        else:
+            buckets = tuple(int(x) for x in args.bucket_sizes.split(",")
+                            if x.strip())
+            if not buckets or any(b <= 0 for b in buckets):
+                ap.error(f"--bucket-sizes must be positive ints, got "
+                         f"{args.bucket_sizes!r}")
+            kw["bucket_sizes"] = buckets
     eng = ServingEngine(bundle, batch_size=args.requests,
                         cache_impl=args.cache_impl,
-                        page_size=args.page_size)
+                        page_size=args.page_size,
+                        prefix_cache=args.prefix_cache, **kw)
     ds = SyntheticDataset(args.task, 1, 64, seed=11)
     for p in ds.prompts(args.requests, 32, offset=10 ** 7):
         eng.submit(p, max_new=args.max_new)
     stats = eng.run()
+    prefix = ""
+    if args.prefix_cache:
+        prefix = (f" | prefix_hits={stats['prefix_hits']} "
+                  f"saved={stats['prefill_tokens_saved']}tok "
+                  f"cow={stats['cow_copies']}")
     print(f"mode={args.mode} served {len(eng.done)} requests | "
           f"alpha={stats.get('alpha', 0):.2f} | "
           f"{stats['tokens_per_s']:.1f} tok/s (CPU) | "
-          f"{stats['cycles']} cycles")
+          f"{stats['cycles']} cycles" + prefix)
 
 
 if __name__ == "__main__":

@@ -349,8 +349,12 @@ def _scatter_kv(buf, new, start, rolling: bool, write_len=None):
     if rolling:
         idx = jnp.mod(idx, cap)
     if write_len is not None:
-        idx = jnp.where(jnp.arange(t)[None, :] < write_len[:, None],
-                        idx, cap + 1)
+        keep = jnp.arange(t)[None, :] < write_len[:, None]
+        if rolling:
+            # only the last ``cap`` valid tokens survive a wrap; dropping
+            # the earlier ones keeps the scatter free of duplicate indices
+            keep &= jnp.arange(t)[None, :] >= (write_len[:, None] - cap)
+        idx = jnp.where(keep, idx, cap + 1)
     bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, t))
     return buf.at[bidx, idx].set(new, mode="drop")
 

@@ -34,6 +34,24 @@ page(s) being appended to.
 Local (sliding-window) layers keep their dense rolling buffers in both
 modes: their capacity is already window-capped and the rolling position
 recovery does not compose with page indirection.
+
+Copy-on-write invariant (prefix sharing)
+----------------------------------------
+Pages are refcounted by the host :class:`PagePool` so one physical page
+can back the same committed prefix in many rows (cross-request prefix
+sharing, ``serving/prefix_cache.py``). The contract every writer upholds:
+
+    **a page with refcount > 1 is never written.**
+
+Rows only ever write at logical positions >= their own committed
+``length``; a prefix-cache hit installs the matched prefix's pages
+read-only (refcount bumped) and the first page the new row *would* write
+into — the partially filled tail page of the shared prefix — is first
+**copied to a freshly allocated page** (:func:`copy_page`, the COW step)
+before the row's page table is patched. Drafter feature-cache extension
+and verify KV commits therefore always land in pages the row owns
+exclusively (refcount == 1), and shared pages stay bit-frozen until the
+last owner releases them.
 """
 from __future__ import annotations
 
@@ -186,9 +204,12 @@ def pool_scatter(pool, table, new, pos, valid=None):
           that are False (or whose position falls outside the row's table)
           are dropped, never written.
 
-    Only the page(s) covering ``pos`` are touched; distinct rows own
-    disjoint physical pages (PagePool invariant), so the scatter has no
-    duplicate indices and is deterministic.
+    Only the page(s) covering ``pos`` are touched. The scatter has no
+    duplicate indices (deterministic) because every page a row WRITES is
+    exclusively its own: rows only write at positions >= their committed
+    length, and the COW invariant (module docstring) guarantees those
+    positions live in refcount-1 pages — prefix-shared pages (refcount >
+    1) are read-only until the last owner releases them.
     """
     table = _norm_table(table)
     page = pool.shape[-3]
@@ -208,14 +229,39 @@ def pool_scatter(pool, table, new, pos, valid=None):
     return pool.at[:, phys, slot].set(new, mode="drop")
 
 
+def copy_page(pool, src, dst):
+    """Copy one physical page's contents ``src -> dst`` (the COW step).
+
+    pool: [..., P, page, H, D] (any stacked leading axes — drafter layers
+    or scanned periods); ``src`` / ``dst`` may be traced int32 scalars.
+    Used when a prefix-cache hit ends inside a page: the shared partial
+    tail page is duplicated into a freshly allocated page before the new
+    row's first write, so a page with refcount > 1 is never written.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    page = jax.lax.dynamic_index_in_dim(pool, src, axis=pool.ndim - 4,
+                                        keepdims=False)
+    return jax.lax.dynamic_update_index_in_dim(pool, page, dst,
+                                               axis=pool.ndim - 4)
+
+
 class PagePool:
-    """Host-side free-list allocator over one wave's physical page space.
+    """Host-side refcounted free-list allocator over one wave's pages.
 
     Pages are interchangeable (no fragmentation): ``alloc`` pops any free
     ids, ``free`` returns them. The serving engine allocates a request's
     worst-case page count at admission (install) and frees it at retire,
     so admission control is one integer comparison against
     :attr:`free_pages` instead of a per-slot ``max_len`` reservation.
+
+    Refcounts make cross-request prefix sharing safe: ``alloc`` hands a
+    page out at refcount 1, :meth:`incref` adds a reader (a prefix-cache
+    hit splicing the page into another row's table), and :meth:`free` is
+    a decref — the page only returns to the free list when its last
+    owner lets go. A page with refcount > 1 is shared and must never be
+    written (the COW invariant, see module docstring); refcount underflow
+    and double frees are hard assertion failures, not silent corruption.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -223,6 +269,7 @@ class PagePool:
         self.page_size = int(page_size)
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._free_set = set(self._free)     # O(1) double-free detection
+        self._ref: List[int] = [0] * self.n_pages
         self.peak_in_use = 0
 
     @property
@@ -233,21 +280,48 @@ class PagePool:
     def pages_in_use(self) -> int:
         return self.n_pages - len(self._free)
 
+    def refcount(self, page: int) -> int:
+        assert 0 <= page < self.n_pages, f"foreign page {page}"
+        return self._ref[page]
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` free page ids; None (no partial grant) if short."""
+        """Pop ``n`` free page ids at refcount 1; None (no partial grant)
+        if short."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(pages)
+        for p in pages:
+            self._ref[p] = 1
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
         return pages
 
-    def free(self, pages: Sequence[int]) -> None:
+    def incref(self, pages: Sequence[int]) -> None:
+        """Add a reader to allocated pages (prefix sharing). Increffing a
+        free page is a bug — there is nothing to share."""
         for p in pages:
-            assert 0 <= p < self.n_pages and p not in self._free_set, \
-                f"double free / foreign page {p}"
-            self._free.append(p)
-            self._free_set.add(p)
+            assert 0 <= p < self.n_pages and self._ref[p] > 0, \
+                f"incref of free / foreign page {p}"
+        for p in pages:
+            self._ref[p] += 1
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; a page returns to the free list
+        when its refcount reaches 0. Freeing an already-free page
+        (refcount underflow / double free) asserts."""
+        for p in pages:
+            assert 0 <= p < self.n_pages and p not in self._free_set \
+                and self._ref[p] > 0, f"double free / foreign page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+                self._free_set.add(p)
+
+    def sanity_check(self) -> None:
+        """Free-list / refcount consistency (tests + debug)."""
+        assert len(self._free) == len(self._free_set)
+        for p in range(self.n_pages):
+            assert (self._ref[p] == 0) == (p in self._free_set), p
 
     def row_table(self, pages: Sequence[int], max_pages: int):
         """[max_pages] int32 row table: allocated pages first, then the

@@ -36,14 +36,42 @@ KV memory (``cache_impl``):
   :func:`~repro.core.state.row_template`). Per-request token output is
   identical across both impls (asserted by the serving bench).
 
+Prefix cache (``prefix_cache=True``, paged only):
+
+* a per-wave :class:`~repro.serving.prefix_cache.PrefixCache` — a radix
+  tree over retired requests' committed token strings whose nodes own
+  refcounted page runs in the wave's pool. Admission matches each prompt
+  against the tree; on a hit the matched prefix's full pages are spliced
+  read-only into the new row's page table (refcount bumped) and only the
+  uncached suffix is prefilled (``install_row(prefix_hit=...)`` — token-
+  identical to a cold install). A match ending mid-page first copies the
+  shared tail page to a fresh page (COW: a page with refcount > 1 is
+  never written). Retiring a request inserts its committed prefix back
+  into the tree (private pages donated); under pool pressure LRU
+  unpinned leaves are evicted. Requires an all-global-attention target:
+  sliding-window rolling buffers and recurrent states cannot be
+  reconstructed from shared pages.
+
+Prompt-length bucketing (``bucket_sizes``, default ``"auto"`` = the
+pow-2 :data:`DEFAULT_BUCKETS` ladder; pass ``None`` for exact-length
+installs): install prefills are padded to a small set of length buckets
+(real length masked via ``true_len``), so the donated install jit
+compiles O(buckets) instead of O(distinct prompt/suffix lengths) under
+naturally varying traffic; ``install_traces`` in stats counts the
+distinct shapes actually traced.
+
 The per-cycle :meth:`ServingEngine.step` API owns ONE decode cycle, so the
 host loop can interleave submissions, refills, and stats collection.
 Aggregate stats track tokens actually committed per request
 (``min(filled, max_new)``), acceptance ``alpha`` over *active* row-cycles
-only, ``wasted_row_cycles``, and the KV-memory counters:
-``refill_copy_bytes`` (accounting model of bytes written per install,
-:func:`~repro.core.state.refill_copy_bytes`), ``pool_pages`` /
-``pool_peak_pages`` and the per-cycle mean ``pool_utilization``.
+only and ``accepted`` draft tokens wired from the verify backends'
+``n_acc``, ``wasted_row_cycles``, the KV-memory counters
+(``refill_copy_bytes`` — accounting model of bytes written per install,
+:func:`~repro.core.state.refill_copy_bytes` — plus ``pool_pages`` /
+``pool_peak_pages`` and the per-cycle mean ``pool_utilization``), and the
+prefix-cache counters (``prefix_hits`` / ``prefix_misses`` /
+``prefix_hit_tokens`` / ``prefill_tokens_saved`` / ``cow_copies`` /
+``prefix_evictions``).
 """
 from __future__ import annotations
 
@@ -56,8 +84,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pipeline as pl
-from repro.core.state import EngineState, install_row, refill_copy_bytes
+from repro.core.state import (EngineState, cow_copy_page, install_row,
+                              refill_copy_bytes)
 from repro.models import kvcache as kvc
+from repro.serving.prefix_cache import PrefixCache, PrefixHit
 
 
 @dataclasses.dataclass
@@ -82,19 +112,40 @@ class Wave:
     t0: float
     cycles: int = 0
     pool: Optional[kvc.PagePool] = None        # paged mode only
-    row_pages: Optional[List[List[int]]] = None  # slot -> allocated pages
+    row_pages: Optional[List[List[int]]] = None  # slot -> PRIVATE pages
+    cache: Optional[PrefixCache] = None        # prefix_cache=True only
+    row_tables: Optional[List[Optional[np.ndarray]]] = None  # host copies
+    row_hits: Optional[List[Optional[PrefixHit]]] = None
+    trunc: Optional[np.ndarray] = None  # [B] output buf overflowed (bool)
 
     @property
     def done(self) -> bool:
         return all(r is None for r in self.requests)
 
 
+#: default install-prefill length buckets (pow-2 ladder; longer prompts
+#: round up to a multiple of the largest bucket)
+DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
 class ServingEngine:
     def __init__(self, bundle: pl.SpecBundle, batch_size: int = 8,
                  seed: int = 0, early_exit: bool = True,
                  refill: bool = True, cache_impl: str = "dense",
-                 page_size: int = 64):
+                 page_size: int = 64, prefix_cache: bool = False,
+                 bucket_sizes="auto"):
         assert cache_impl in ("dense", "paged"), cache_impl
+        if prefix_cache:
+            if cache_impl != "paged":
+                raise ValueError(
+                    "prefix_cache=True requires cache_impl='paged': "
+                    "cross-request sharing is a page-table splice")
+            kinds = set(bundle.target_cfg.pattern_for_depth())
+            if kinds != {"global"}:
+                raise ValueError(
+                    "prefix_cache=True requires an all-global-attention "
+                    "target: sliding-window rolling buffers and recurrent "
+                    f"states cannot be rebuilt from shared pages ({kinds})")
         if cache_impl == "paged" and not early_exit:
             # a retired slot's pages return to the pool but its stale page
             # table survives until refill; without early-exit masking the
@@ -112,6 +163,13 @@ class ServingEngine:
         self.refill = refill
         self.cache_impl = cache_impl
         self.page_size = page_size
+        self.prefix_cache = prefix_cache
+        # "auto" -> the pow-2 ladder; None / () -> exact-length installs
+        # (one donated-install trace per distinct prompt/suffix length)
+        if bucket_sizes == "auto":
+            bucket_sizes = DEFAULT_BUCKETS
+        self.bucket_sizes = (tuple(sorted(bucket_sizes))
+                             if bucket_sizes else None)
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
@@ -124,12 +182,17 @@ class ServingEngine:
                       "wall_s": 0.0, "waves": 0, "alpha": 0.0,
                       "wasted_row_cycles": 0, "refills": 0,
                       "refill_copy_bytes": 0, "installs": 0,
+                      "install_traces": 0,
                       "pool_pages": 0, "pool_peak_pages": 0,
-                      "pool_utilization": 0.0}
+                      "pool_utilization": 0.0,
+                      "prefix_hits": 0, "prefix_misses": 0,
+                      "prefix_hit_tokens": 0, "prefill_tokens_saved": 0,
+                      "cow_copies": 0, "prefix_evictions": 0}
         self._alpha_num = 0
         self._alpha_den = 0
         self._util_sum = 0.0
         self._util_samples = 0
+        self._install_shapes = set()
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
         # Monotonic uid: len(queue)+len(done) would collide once a wave
@@ -166,17 +229,23 @@ class ServingEngine:
         cap = max(self._bufs_needed(r, g) for r in cand)
         pool = None
         row_pages = None
+        cache = None
         if self.cache_impl == "paged":
             # page-granular sizing: the table is as wide as the largest
             # candidate needs, but the POOL holds only the worst-case
             # concurrent set (sum of the b largest candidates) — less
             # than the dense b * max_len reservation whenever request
-            # sizes are mixed
+            # sizes are mixed. With the prefix cache on, the pool also
+            # holds the whole candidate window so retired prefixes can be
+            # RETAINED for upcoming traffic instead of thrashing (LRU
+            # eviction reclaims them the moment admission needs pages).
             need = sorted((self._pages_needed(r, g) for r in cand),
                           reverse=True)
             mp = need[0]
-            pool_pages = sum(need[:b])
+            pool_pages = sum(need) if self.prefix_cache else sum(need[:b])
             pool = kvc.PagePool(pool_pages, self.page_size)
+            if self.prefix_cache:
+                cache = PrefixCache(pool)
             row_pages = [[] for _ in range(b)]
             # all rows start unallocated: table rows hold the out-of-range
             # sentinel until _install patches them
@@ -198,7 +267,9 @@ class ServingEngine:
                          bufs=np.zeros((b, cap), np.int32),
                          filled=np.zeros((b,), np.int64),
                          targets=np.zeros((b,), np.int64),
-                         t0=time.time(), pool=pool, row_pages=row_pages)
+                         t0=time.time(), pool=pool, row_pages=row_pages,
+                         cache=cache, row_tables=[None] * b,
+                         row_hits=[None] * b, trunc=np.zeros((b,), bool))
         # two passes: install EVERY initial request before the first retire.
         # A retire can chain-refill from beyond the pool-sizing candidate
         # window; interleaving it with the initial installs could hand those
@@ -215,34 +286,107 @@ class ServingEngine:
             self._finish_wave()
         return True
 
+    def _bucket(self, n: int) -> int:
+        """Pad a prefill length to its bucket (identity when disabled)."""
+        if self.bucket_sizes is None:
+            return n
+        for b in self.bucket_sizes:
+            if b >= n:
+                return b
+        top = self.bucket_sizes[-1]
+        return -(-n // top) * top
+
     def _install(self, slot: int, r: Request) -> None:
         """Prefill ``r`` into ``slot`` of the running batch (slot refill).
 
         The donated :func:`install_row` consumes the old wave state, so
         the splice / page writes happen in place — no full-state copy in
         either impl. Paged mode additionally allocates the request's
-        pages here (freed again by :meth:`_retire`).
+        pages here (freed again by :meth:`_retire`); with the prefix
+        cache on, the prompt is first matched against the radix tree:
+        the matched prefix's full pages are spliced read-only into the
+        row's table, a mid-page match tail is COW-copied, and only the
+        uncached suffix is prefilled.
         """
         w = self.wave
         self.key, sub = jax.random.split(self.key)
+        prompt = np.asarray(r.prompt, np.int32)
         row_table = None
+        hit = None
         if self.cache_impl == "paged":
             g = self.bundle.spec.gamma
-            pages = w.pool.alloc(self._pages_needed(r, g))
+            n_total = self._pages_needed(r, g)
+            if w.cache is not None:
+                hit = w.cache.lookup(prompt)
+            if hit is not None:
+                w.cache.acquire(hit)        # pin shared pages + COW source
+            n_new = n_total - (len(hit.shared) if hit else 0)
+            if w.pool.free_pages < n_new and w.cache is not None:
+                w.cache.evict_for(n_new)
+            pages = w.pool.alloc(n_new)
+            if pages is None and hit is not None:
+                # tight pool: the admission guarantee (_fits) is for the
+                # miss shape — give the hit back and install cold
+                w.cache.release_partial(hit)
+                w.cache.release(hit)
+                hit = None
+                w.cache.evict_for(n_total)
+                pages = w.pool.alloc(n_total)
             assert pages is not None, "admission control must guarantee pages"
             w.row_pages[slot] = pages
-            row_table = w.pool.row_table(pages, w.state.max_pages)
-        self.stats["refill_copy_bytes"] += refill_copy_bytes(
-            w.state, len(r.prompt))
+            shared = hit.shared if hit else []
+            row_table = w.pool.row_table(shared + pages, w.state.max_pages)
+            w.row_tables[slot] = row_table
+            if hit is not None:
+                if hit.partial is not None:
+                    # COW: duplicate the shared partial tail page into the
+                    # row's first private page BEFORE any write lands there
+                    # (a page with refcount > 1 is never written)
+                    w.state = cow_copy_page(w.state, hit.partial, pages[0])
+                    self.stats["cow_copies"] += 1
+                w.cache.release_partial(hit)
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hit_tokens"] += hit.length
+                # tokens the suffix prefill actually skips relative to a
+                # cold install — measured in BUCKETED lengths, so padding
+                # that a cold install would have paid anyway counts as
+                # saved and padding the suffix re-pays is deducted
+                self.stats["prefill_tokens_saved"] += (
+                    self._bucket(len(prompt))
+                    - self._bucket(len(prompt) - hit.length))
+            elif w.cache is not None:
+                self.stats["prefix_misses"] += 1
+        w.row_hits[slot] = hit
+        prefix_len = hit.length if hit else 0
+        suffix = prompt[prefix_len:]
+        s = len(suffix)
+        true_len = None
+        if self.bucket_sizes is not None:
+            pad = self._bucket(s)
+            suffix = np.concatenate(
+                [suffix, np.zeros((pad - s,), np.int32)])
+            true_len = s
+        # full donated-install trace key: suffix shape + warm/cold + the
+        # wave geometry the state shapes derive from (a new wave with a
+        # different batch / capacity / pool size retraces even for an
+        # already-seen suffix length)
+        self._install_shapes.add(
+            (len(suffix), hit is not None, w.state.batch, w.state.max_len,
+             w.pool.n_pages if w.pool is not None else 0))
+        self.stats["install_traces"] = len(self._install_shapes)
+        self.stats["refill_copy_bytes"] += refill_copy_bytes(w.state, s)
         self.stats["installs"] += 1
-        w.state = install_row(self.bundle, w.state, slot, r.prompt, key=sub,
+        w.state = install_row(self.bundle, w.state, slot, suffix, key=sub,
                               temperature=self.bundle.spec.temperature,
-                              row_table=row_table)
+                              row_table=row_table,
+                              prefix_hit=prefix_len if hit else None,
+                              true_len=true_len)
         w.bufs[slot] = 0
         w.bufs[slot, 0] = int(np.asarray(w.state.anchor)[slot])
         w.filled[slot] = 1
         w.targets[slot] = r.max_new
         w.requests[slot] = r
+        w.trunc[slot] = False
         r.t_start = time.time()
         r.n_cycles = 0
 
@@ -263,14 +407,21 @@ class ServingEngine:
 
     def _fits(self, r: Request) -> bool:
         """Can ``r`` be adopted into the current wave's allocation?
-        Paged mode admits on free *pages*, not a per-slot max_len row."""
+        Paged mode admits on free *pages*, not a per-slot max_len row;
+        with the prefix cache on, LRU-evictable (unpinned) cached pages
+        count as available — the check is deliberately for the MISS
+        shape, so an install can always fall back to cold if the pool is
+        too tight to honor its hit."""
         w = self.wave
         g = self.bundle.spec.gamma
         if self._bufs_needed(r, g) > w.bufs.shape[1]:
             return False
         if self.cache_impl == "paged":
             n = self._pages_needed(r, g)
-            return n <= w.state.max_pages and n <= w.pool.free_pages
+            avail = w.pool.free_pages
+            if w.cache is not None:
+                avail += w.cache.evictable_pages()
+            return n <= w.state.max_pages and n <= avail
         return self._cache_needed(r, g) <= w.state.max_len
 
     def _host_active(self) -> np.ndarray:
@@ -314,7 +465,8 @@ class ServingEngine:
         self.stats["wasted_row_cycles"] += int(b - active.sum())
         self._alpha_num += int(n_out[active].sum())
         self._alpha_den += int(active.sum())
-        self.stats["accepted"] += int(np.maximum(n_out[active] - 1, 0).sum())
+        # real accepted-draft counts straight from the verify backends
+        self.stats["accepted"] += int(np.asarray(out["n_acc"])[active].sum())
         for i in range(b):
             r = w.requests[i]
             if r is None:
@@ -323,6 +475,11 @@ class ServingEngine:
                 m = min(int(n_out[i]), cap - int(w.filled[i]))
                 if m > 0:
                     w.bufs[i, w.filled[i]: w.filled[i] + m] = toks[i, :m]
+                if m < int(n_out[i]):
+                    # committed tokens fell off the output buffer: the
+                    # banked stream no longer mirrors the cache contents,
+                    # so this row must not seed the prefix tree
+                    w.trunc[i] = True
                 w.filled[i] = min(w.filled[i] + int(n_out[i]), cap)
                 r.n_cycles += 1
             if w.filled[i] >= w.targets[i] or r.n_cycles > r.max_new + 8:
@@ -345,11 +502,33 @@ class ServingEngine:
             self.stats["tokens"] += int(min(w.filled[slot], r.max_new))
             w.requests[slot] = None
             w.targets[slot] = 0
-            if w.pool is not None and w.row_pages[slot]:
-                # free before the refill below so the incoming request can
-                # reuse this row's pages immediately
-                w.pool.free(w.row_pages[slot])
+            if w.pool is not None:
+                donated = set()
+                if w.cache is not None and not w.trunc[slot]:
+                    # seed the radix tree with this request's committed
+                    # string (prompt + every banked token except the last
+                    # anchor, which was never written to cache); private
+                    # pages covering the new suffix are DONATED to the
+                    # tree, the rest are freed below
+                    committed = np.concatenate(
+                        [np.asarray(r.prompt, np.int32),
+                         w.bufs[slot, : max(int(w.filled[slot]) - 1, 0)]])
+                    hit = w.row_hits[slot]
+                    donated = w.cache.insert(
+                        committed, w.row_tables[slot],
+                        private=set(w.row_pages[slot]),
+                        min_donate_idx=len(hit.shared) if hit else 0)
+                if w.row_hits[slot] is not None:
+                    # drop this row's read refs on the shared prefix pages
+                    w.cache.release(w.row_hits[slot])
+                    w.row_hits[slot] = None
+                leftover = [p for p in w.row_pages[slot] if p not in donated]
+                if leftover:
+                    # free before the refill below so the incoming request
+                    # can reuse this row's pages immediately
+                    w.pool.free(leftover)
                 w.row_pages[slot] = []
+                w.row_tables[slot] = None
             if not (self.refill and self.queue
                     and self._fits(self.queue[0])):
                 return
@@ -374,6 +553,8 @@ class ServingEngine:
             self.stats["pool_utilization"] = (
                 self._util_sum / self._util_samples
                 if self._util_samples else 0.0)
+        if w.cache is not None:
+            self.stats["prefix_evictions"] += w.cache.evictions
         self.wave = None
 
     # ----------------------------------------------------- drain loop -----
