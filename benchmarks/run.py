@@ -34,7 +34,8 @@ def main() -> None:
     sections = [("kernels", lambda q: kernel_bench.run(q)),
                 ("engine", lambda q: engine_bench.run(q)),
                 ("serving", lambda q: serving_bench.run(q)),
-                ("prefix", lambda q: serving_bench.run_prefix(q))]
+                ("prefix", lambda q: serving_bench.run_prefix(q)),
+                ("resident", lambda q: serving_bench.run_resident(q))]
 
     study_dir = Path(__file__).resolve().parents[1] / "experiments" / "study"
     if not args.skip_study:

@@ -27,6 +27,16 @@ and ON: per-request tokens are asserted identical, and the hit-rate
 metrics (``prefix_hits`` / ``prefill_tokens_saved`` / ``cow_copies`` /
 ``prefix_evictions``) land in the ``prefix`` section of the same JSON.
 
+``--suite resident`` replays a RESIDENT-server schedule: the engine stays
+alive across several submit→drain rounds (each round is a wave turnover),
+and round N+1's prompts extend round N's committed strings. With the
+engine-lifetime pool (``pool_scope="engine"``, the default) the radix
+tree survives the turnover, so the later rounds hit prefixes cached in
+EARLIER waves (``prefix_hit_tokens`` grows after the first turnover —
+asserted); per-request tokens are asserted identical cache-on vs
+cache-off vs legacy per-wave pools. Results land in the ``resident``
+section.
+
 Needs no trained study artifacts — builds a tiny random bundle. The
 bundle uses a SMALL vocab (17): with random-init drafters the chance a
 draft token matches the target argmax scales as ~1/vocab, and the
@@ -230,8 +240,103 @@ def run_prefix(quick: bool = False) -> None:
     })
 
 
+# ---------------------------------------------------------- resident suite -
+def _resident_rounds(bundle, quick: bool):
+    """Submit→drain rounds for a resident server: round 1 is a shared-
+    system-prompt fleet, each later round's prompts extend the previous
+    round's committed prompt+answer strings (multi-turn sessions)."""
+    v = bundle.target_cfg.vocab_size
+    rng = np.random.default_rng(0)
+    sysp = rng.integers(3, v, size=18).astype(np.int32)
+    n_fleet = 2 if quick else 4
+    n_rounds = 2 if quick else 3
+    rounds = [[]]
+    for i in range(n_fleet):
+        tail = rng.integers(3, v, size=4 + i).astype(np.int32)
+        rounds[0].append((np.concatenate([sysp, tail]), 4 + (i % 2)))
+    for _ in range(n_rounds - 1):
+        prev, nxt = rounds[-1], []
+        for p, n in prev:
+            ans = _greedy(bundle, p, n)
+            nxt.append((np.concatenate(
+                [p, ans, rng.integers(3, v, size=4).astype(np.int32)]),
+                3 if quick else 4))
+        rounds.append(nxt)
+    return rounds
+
+
+def _serve_resident(bundle, rounds, batch: int, **kw):
+    """One resident engine across every round; returns (per-round stats
+    snapshots, final stats, per-request outputs)."""
+    eng = ServingEngine(bundle, batch_size=batch, seed=0,
+                        cache_impl="paged", page_size=PAGE_SIZE,
+                        pool_headroom=1.5, **kw)
+    marks = []
+    for reqs in rounds:
+        for p, n in reqs:
+            eng.submit(p, max_new=n)
+        marks.append(eng.run())     # cumulative snapshot incl. tokens_per_s
+    outs = {r.uid: r.out.tolist() for r in eng.done}
+    return marks, marks[-1], outs
+
+
+def run_resident(quick: bool = False) -> None:
+    gamma, k = (4, 2) if quick else (5, 2)
+    batch = 2
+    bundle = _tiny_bundle(gamma, k, vocab=VOCAB)
+    rounds = _resident_rounds(bundle, quick)
+
+    _, legacy, legacy_out = _serve_resident(bundle, rounds, batch,
+                                            pool_scope="wave")
+    _, off, off_out = _serve_resident(bundle, rounds, batch)
+    marks, on, on_out = _serve_resident(bundle, rounds, batch,
+                                        prefix_cache=True)
+    tokens_equal = legacy_out == off_out == on_out
+    assert tokens_equal, "pool scope / prefix cache changed request output"
+    # the resident acceptance criterion: prompts of round N+1 hit prefixes
+    # the radix tree committed in round N's wave — hits must be recorded
+    # AFTER the first wave turnover
+    assert on["waves"] >= len(rounds), (on["waves"], len(rounds))
+    cross_wave_hit_tokens = (on["prefix_hit_tokens"]
+                             - marks[0]["prefix_hit_tokens"])
+    assert cross_wave_hit_tokens > 0, \
+        "no prefix cached in wave N was hit in wave N+1"
+    assert off["prefix_hits"] == 0 and legacy["prefix_hits"] == 0
+
+    _row("resident_legacy_wave_pools", legacy)
+    _row("resident_engine_pool_cache_off", off)
+    _row("resident_engine_pool_cache_on", on)
+    total_prompt_tokens = sum(len(p) for rs in rounds for p, _ in rs)
+    hit_rate = on["prefix_hit_tokens"] / total_prompt_tokens
+    print(csv_row(
+        "resident_cross_wave_hits", 0.0,
+        f"cross_wave_hit_tokens={cross_wave_hit_tokens} "
+        f"hit_tokens={on['prefix_hit_tokens']}/{total_prompt_tokens} "
+        f"({hit_rate:.1%}) saved_prefill_tokens="
+        f"{on['prefill_tokens_saved']} waves={on['waves']} "
+        f"cached_pages={on['prefix_cached_pages']}/{on['pool_pages']} "
+        f"tokens_equal={tokens_equal}"))
+
+    _merge_bench_json("resident", {
+        "config": {"gamma": gamma, "k": k, "batch": batch,
+                   "n_rounds": len(rounds),
+                   "n_requests": sum(len(r) for r in rounds),
+                   "quick": quick, "page_size": PAGE_SIZE, "vocab": VOCAB},
+        "legacy_wave_pools": dict(legacy),
+        "engine_pool_cache_off": dict(off),
+        "engine_pool_cache_on": dict(on),
+        "per_round_cache_on": marks,
+        "tokens_equal": tokens_equal,
+        "cross_wave_hit_tokens": cross_wave_hit_tokens,
+        "prompt_tokens_total": total_prompt_tokens,
+        "prefill_token_hit_rate": hit_rate,
+    })
+
+
 if __name__ == "__main__":
-    if "--prefix" in sys.argv:
+    if "--resident" in sys.argv:
+        run_resident("--quick" in sys.argv)
+    elif "--prefix" in sys.argv:
         run_prefix("--quick" in sys.argv)
     else:
         run("--quick" in sys.argv)

@@ -3,6 +3,9 @@
 #
 #   scripts/tier1.sh            # == JAX_PLATFORMS=cpu PYTHONPATH=src pytest -x -q
 #   scripts/tier1.sh --fast     # skip slow AND pallas interpret-mode kernels
+#   scripts/tier1.sh --stress   # randomized pool/radix/COW invariant suite:
+#                               # the fixed tier-1 seed PLUS the reroll seeds
+#                               # (marked `slow`, see tests/test_pool_invariants.py)
 #   scripts/tier1.sh tests/test_paged.py   # extra args pass through
 #
 # Pallas kernels run in interpret mode on CPU (pytest marker `pallas`);
@@ -15,5 +18,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--fast" ]]; then
   shift
   exec python -m pytest -x -q -m "not slow and not pallas" "$@"
+fi
+if [[ "${1:-}" == "--stress" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_pool_invariants.py \
+    -m "slow or not slow" "$@"
 fi
 exec python -m pytest -x -q "$@"

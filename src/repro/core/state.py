@@ -23,6 +23,12 @@ then only patches the page-table row and splices the small dense leaves.
 install lowers to in-place page writes (the dense path gets the same
 donated treatment, turning the old full-state ``adopt_row`` copy into an
 in-place row splice).
+
+Pool ownership is external (the borrowed-pool contract): a serving wave's
+state *borrows* its page-pool buffers from the engine-lifetime
+``PagePool`` — :func:`capture_pools` harvests them at wave turnover and
+:func:`adopt_pools` re-installs them into the next wave's state, so pages
+the radix prefix cache retained keep their KV across ``start_wave``.
 """
 from __future__ import annotations
 
@@ -343,6 +349,55 @@ def _map_paged_pools(state: EngineState, fn) -> EngineState:
               for name, v in state.target.items()}
     return state.replace(target=target, d1_feat=blk(state.d1_feat),
                          d2_feat=blk(state.d2_feat))
+
+
+# ------------------------------------------------- borrowed-pool contract ---
+def capture_pools(state: EngineState) -> Dict[str, Any]:
+    """Harvest the physical k/v page-pool buffers of every paged cache.
+
+    The pool buffers ``[*lead, P, page, H, D]`` are batch-free — only the
+    page table and the dense leaves depend on the wave geometry — so an
+    engine-lifetime :class:`~repro.models.kvcache.PagePool` can carry them
+    *across* waves: at wave turnover the engine captures them here and
+    re-installs them into the next wave's freshly allocated state via
+    :func:`adopt_pools`, keeping every page the radix prefix cache owns
+    bit-intact (cached prefixes survive ``start_wave``). Keys name the
+    cache ("target/<entry>", "d1_feat", "d2_feat"); values are ``(k, v)``.
+    """
+    pools: Dict[str, Any] = {}
+    for name, v in state.target.items():
+        if isinstance(v, dict) and kvc.is_paged(v):
+            pools[f"target/{name}"] = (v["k"], v["v"])
+    if kvc.is_paged(state.d1_feat):
+        pools["d1_feat"] = (state.d1_feat["k"], state.d1_feat["v"])
+    if kvc.is_paged(state.d2_feat):
+        pools["d2_feat"] = (state.d2_feat["k"], state.d2_feat["v"])
+    return pools
+
+
+def adopt_pools(state: EngineState, pools: Dict[str, Any]) -> EngineState:
+    """Install externally owned pool buffers (from :func:`capture_pools`)
+    into a freshly initialized wave state — the borrowed-pool contract:
+    the wave does not own its page pools, the engine does.
+
+    Pool geometry (pool_pages / page_size / heads) must match the state's
+    allocation; batch size and table width may differ freely. The caller
+    must drop its own reference after the wave's first donated install
+    consumes the state (the engine re-captures at wave turnover).
+    """
+    def blk(d, path):
+        if not kvc.is_paged(d) or path not in pools:
+            return d
+        k, v = pools[path]
+        assert k.shape == d["k"].shape and k.dtype == d["k"].dtype, (
+            "borrowed pool geometry mismatch", path, k.shape, d["k"].shape)
+        return {**d, "k": k, "v": v}
+
+    target = {name: (blk(v, f"target/{name}") if isinstance(v, dict) else v)
+              for name, v in state.target.items()}
+    return state.replace(target=target,
+                         d1_feat=blk(state.d1_feat, "d1_feat"),
+                         d2_feat=blk(state.d2_feat, "d2_feat"))
 
 
 def _cow_copy_impl(state: EngineState, src, dst) -> EngineState:

@@ -44,6 +44,22 @@ def main():
                          "(bounds donated-install recompiles under varying "
                          "prompt lengths), e.g. 32,64,128; 'off' forces "
                          "exact-length installs; default: pow-2 ladder")
+    ap.add_argument("--pool-scope", default="engine",
+                    choices=["engine", "wave"],
+                    help="paged pool lifetime: 'engine' (default) keeps ONE "
+                         "page pool for the server's lifetime so cached "
+                         "prefixes survive wave turnover (resident "
+                         "serving); 'wave' restores the legacy per-wave "
+                         "pools")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="explicit engine-lifetime pool size in pages "
+                         "(default: auto-sized from the first wave's "
+                         "candidate window by the engine-global rule)")
+    ap.add_argument("--pool-headroom", type=float, default=1.0,
+                    help="prefix-retention headroom as a fraction of the "
+                         "worst-case concurrent live set (prefix cache "
+                         "only; default 1.0 = retain up to one live-set's "
+                         "worth of cached prefixes)")
     args = ap.parse_args()
 
     if args.random:
@@ -80,7 +96,10 @@ def main():
     eng = ServingEngine(bundle, batch_size=args.requests,
                         cache_impl=args.cache_impl,
                         page_size=args.page_size,
-                        prefix_cache=args.prefix_cache, **kw)
+                        prefix_cache=args.prefix_cache,
+                        pool_scope=args.pool_scope,
+                        pool_pages=args.pool_pages,
+                        pool_headroom=args.pool_headroom, **kw)
     ds = SyntheticDataset(args.task, 1, 64, seed=11)
     for p in ds.prompts(args.requests, 32, offset=10 ** 7):
         eng.submit(p, max_new=args.max_new)

@@ -52,6 +52,19 @@ before the row's page table is patched. Drafter feature-cache extension
 and verify KV commits therefore always land in pages the row owns
 exclusively (refcount == 1), and shared pages stay bit-frozen until the
 last owner releases them.
+
+Pool scope (the borrowed-pool contract)
+---------------------------------------
+By default the serving engine owns ONE :class:`PagePool` for its whole
+lifetime and every wave borrows it: the host allocator (ids, refcounts,
+free list) persists untouched across ``start_wave``, and the device-side
+pool buffers are carried over via ``core.state.capture_pools`` /
+``adopt_pools`` (they are batch-free, so a new wave's geometry only
+changes the page table and dense leaves). That is what lets the radix
+prefix cache retain committed prefixes across wave turnover — a resident
+server stops re-prefilling its system prompts every wave. The legacy
+per-wave pool (``pool_scope="wave"``) allocates and drops a fresh pool
+per wave and is kept as the A/B reference.
 """
 from __future__ import annotations
 
@@ -247,7 +260,13 @@ def copy_page(pool, src, dst):
 
 
 class PagePool:
-    """Host-side refcounted free-list allocator over one wave's pages.
+    """Host-side refcounted free-list allocator over a page space.
+
+    One pool instance backs either a single wave (legacy per-wave scope)
+    or the whole serving engine's lifetime (``pool_scope="engine"``, the
+    default): waves *borrow* the pool, so pages the radix prefix cache
+    owns — and their device-side contents, carried across waves via
+    ``core.state.capture_pools``/``adopt_pools`` — survive wave turnover.
 
     Pages are interchangeable (no fragmentation): ``alloc`` pops any free
     ids, ``free`` returns them. The serving engine allocates a request's
@@ -283,6 +302,17 @@ class PagePool:
     def refcount(self, page: int) -> int:
         assert 0 <= page < self.n_pages, f"foreign page {page}"
         return self._ref[page]
+
+    @property
+    def free_page_ids(self):
+        """Frozen snapshot of the free page ids (invariant tests: the
+        free list and the referenced set must stay disjoint)."""
+        return frozenset(self._free_set)
+
+    def refcounts(self) -> List[int]:
+        """Snapshot of every page's refcount (invariant tests: refcounts
+        must equal the table + radix-tree reference counts)."""
+        return list(self._ref)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Pop ``n`` free page ids at refcount 1; None (no partial grant)

@@ -25,8 +25,9 @@ KV memory (``cache_impl``):
 
 * ``dense`` — every slot reserves the worst-case ``max_len`` of the wave's
   candidate set for its whole lifetime.
-* ``paged`` — one :class:`~repro.models.kvcache.PagePool` per wave backs
-  the target global-attention KV and both drafter feature caches.
+* ``paged`` — a :class:`~repro.models.kvcache.PagePool` (engine-lifetime
+  by default, see *Pool scope* below) backs the target global-attention
+  KV and both drafter feature caches.
   **Admission accounts in pages**: a request needs
   ``ceil(cache_needed / page_size)`` pages and is adopted iff that many
   pages are free — not iff a dense ``max_len`` row is. **Retire frees its
@@ -36,21 +37,42 @@ KV memory (``cache_impl``):
   :func:`~repro.core.state.row_template`). Per-request token output is
   identical across both impls (asserted by the serving bench).
 
+Pool scope (``pool_scope``, paged only — the borrowed-pool contract):
+
+* ``engine`` (default) — the engine allocates ONE :class:`PagePool` for
+  its whole lifetime, sized once by the engine-global rule
+  (:meth:`ServingEngine._pool_budget`: the worst-case *concurrent* live
+  set plus ``pool_headroom`` × that for prefix retention, or an explicit
+  ``pool_pages`` override). Waves are *borrowers*, not owners: each
+  ``start_wave`` builds its page tables against the shared pool, the
+  device pool buffers are captured at wave turnover and re-installed
+  into the next wave's state (:func:`~repro.core.state.capture_pools` /
+  :func:`~repro.core.state.adopt_pools`), and a new wave's initial set
+  is capped to what the pool can grant (later arrivals wait for refill
+  admission). Eviction pressure is engine-global: free pages plus the
+  radix cache's evictable pages, regardless of which wave cached them.
+* ``wave`` — legacy per-wave pools (allocated in ``start_wave``, dropped
+  with the wave; every cached prefix dies at turnover). Kept as the A/B
+  reference for the serving bench and parity tests.
+
 Prefix cache (``prefix_cache=True``, paged only):
 
-* a per-wave :class:`~repro.serving.prefix_cache.PrefixCache` — a radix
-  tree over retired requests' committed token strings whose nodes own
-  refcounted page runs in the wave's pool. Admission matches each prompt
-  against the tree; on a hit the matched prefix's full pages are spliced
-  read-only into the new row's page table (refcount bumped) and only the
-  uncached suffix is prefilled (``install_row(prefix_hit=...)`` — token-
-  identical to a cold install). A match ending mid-page first copies the
-  shared tail page to a fresh page (COW: a page with refcount > 1 is
-  never written). Retiring a request inserts its committed prefix back
-  into the tree (private pages donated); under pool pressure LRU
-  unpinned leaves are evicted. Requires an all-global-attention target:
-  sliding-window rolling buffers and recurrent states cannot be
-  reconstructed from shared pages.
+* a :class:`~repro.serving.prefix_cache.PrefixCache` — a radix tree over
+  retired requests' committed token strings whose nodes own refcounted
+  page runs in the pool. With the default engine-lifetime pool the tree
+  OUTLIVES waves: wave N+1's prompts hit prefixes committed in wave N
+  (the resident-server fast path; see ``--suite resident``). Admission
+  matches each prompt against the tree; on a hit the matched prefix's
+  full pages are spliced read-only into the new row's page table
+  (refcount bumped) and only the uncached suffix is prefilled
+  (``install_row(prefix_hit=...)`` — token-identical to a cold install).
+  A match ending mid-page first copies the shared tail page to a fresh
+  page (COW: a page with refcount > 1 is never written). Retiring a
+  request inserts its committed prefix back into the tree (private pages
+  donated); under pool pressure LRU unpinned leaves are evicted.
+  Requires an all-global-attention target: sliding-window rolling
+  buffers and recurrent states cannot be reconstructed from shared
+  pages.
 
 Prompt-length bucketing (``bucket_sizes``, default ``"auto"`` = the
 pow-2 :data:`DEFAULT_BUCKETS` ladder; pass ``None`` for exact-length
@@ -84,8 +106,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pipeline as pl
-from repro.core.state import (EngineState, cow_copy_page, install_row,
-                              refill_copy_bytes)
+from repro.core.state import (EngineState, adopt_pools, capture_pools,
+                              cow_copy_page, install_row, refill_copy_bytes)
 from repro.models import kvcache as kvc
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
 
@@ -111,12 +133,14 @@ class Wave:
     targets: np.ndarray         # [B] per-request max_new (0 for idle slots)
     t0: float
     cycles: int = 0
-    pool: Optional[kvc.PagePool] = None        # paged mode only
+    pool: Optional[kvc.PagePool] = None        # paged mode (BORROWED when
+    #                                            pool_scope="engine")
     row_pages: Optional[List[List[int]]] = None  # slot -> PRIVATE pages
     cache: Optional[PrefixCache] = None        # prefix_cache=True only
     row_tables: Optional[List[Optional[np.ndarray]]] = None  # host copies
     row_hits: Optional[List[Optional[PrefixHit]]] = None
     trunc: Optional[np.ndarray] = None  # [B] output buf overflowed (bool)
+    evictions0: int = 0                 # cache.evictions at wave start
 
     @property
     def done(self) -> bool:
@@ -133,8 +157,17 @@ class ServingEngine:
                  seed: int = 0, early_exit: bool = True,
                  refill: bool = True, cache_impl: str = "dense",
                  page_size: int = 64, prefix_cache: bool = False,
-                 bucket_sizes="auto"):
+                 bucket_sizes="auto", pool_scope: str = "engine",
+                 pool_pages: Optional[int] = None,
+                 pool_headroom: float = 1.0):
         assert cache_impl in ("dense", "paged"), cache_impl
+        assert pool_scope in ("engine", "wave"), pool_scope
+        if pool_pages is not None and not (cache_impl == "paged"
+                                           and pool_scope == "engine"):
+            raise ValueError(
+                "pool_pages only sizes the engine-lifetime pool "
+                "(cache_impl='paged', pool_scope='engine'); per-wave "
+                "pools are sized per wave by the engine-global rule")
         if prefix_cache:
             if cache_impl != "paged":
                 raise ValueError(
@@ -164,6 +197,14 @@ class ServingEngine:
         self.cache_impl = cache_impl
         self.page_size = page_size
         self.prefix_cache = prefix_cache
+        self.pool_scope = pool_scope
+        self._pool_pages_cfg = pool_pages
+        self.pool_headroom = float(pool_headroom)
+        # engine-lifetime pool + radix tree (paged, pool_scope="engine"):
+        # created at the first start_wave, borrowed by every wave after
+        self.pool: Optional[kvc.PagePool] = None
+        self.cache: Optional[PrefixCache] = None
+        self._pools = None      # device pool buffers retained between waves
         # "auto" -> the pow-2 ladder; None / () -> exact-length installs
         # (one donated-install trace per distinct prompt/suffix length)
         if bucket_sizes == "auto":
@@ -187,7 +228,8 @@ class ServingEngine:
                       "pool_utilization": 0.0,
                       "prefix_hits": 0, "prefix_misses": 0,
                       "prefix_hit_tokens": 0, "prefill_tokens_saved": 0,
-                      "cow_copies": 0, "prefix_evictions": 0}
+                      "cow_copies": 0, "prefix_evictions": 0,
+                      "prefix_cached_pages": 0}
         self._alpha_num = 0
         self._alpha_den = 0
         self._util_sum = 0.0
@@ -209,18 +251,77 @@ class ServingEngine:
         # early long-prompt request forever; per-slot prefill removed the
         # uniform-length constraint that motivated the sort.)
         take = self.queue[: self.batch_size]
+        if self.pool is not None and take:
+            # engine-lifetime pool: a NEW wave's initial set must fit the
+            # fixed pool even after the radix tree gives back everything
+            # it can — requests beyond the budget stay queued and enter
+            # through refill admission (_fits) instead. Between waves
+            # nothing is pinned, so the budget is the whole pool.
+            g = self.bundle.spec.gamma
+            budget = self.pool.free_pages + (
+                self.cache.evictable_pages() if self.cache is not None
+                else 0)
+            kept: List[Request] = []
+            acc = 0
+            for r in take:
+                n = self._pages_needed(r, g)
+                if acc + n > budget:
+                    break
+                kept.append(r)
+                acc += n
+            if not kept:
+                raise RuntimeError(
+                    f"request uid={take[0].uid} needs "
+                    f"{self._pages_needed(take[0], g)} pages but the "
+                    f"engine-lifetime pool can grant at most {budget} of "
+                    f"{self.pool.n_pages}; raise pool_pages / "
+                    f"pool_headroom (or use pool_scope='wave')")
+            take = kept
         self.queue = self.queue[len(take):]
         return take
+
+    def _pool_budget(self, need: List[int], b: int) -> int:
+        """Engine-global pool sizing rule (the single source of truth for
+        BOTH pool scopes): the worst-case *concurrent* live set — the
+        ``b`` largest candidate page needs — plus ``pool_headroom`` × that
+        for prefix retention when the radix cache is on. Refill candidates
+        are deliberately NOT summed in: they run in slots the live set
+        vacates, so counting their full needs on top of the live set (the
+        old ``sum(need)`` rule) double-counted them; only their retired
+        prefixes — bounded by the headroom — need extra pages."""
+        live = sum(need[:b])
+        if not self.prefix_cache:
+            return live
+        return live + int(np.ceil(self.pool_headroom * live))
 
     # ------------------------------------------------------ step API ------
     def start_wave(self) -> bool:
         """Allocate + prefill the next running batch. False if queue empty."""
         assert self.wave is None, "finish the active wave first"
+        g = self.bundle.spec.gamma
+        if (self.cache_impl == "paged" and self.pool_scope == "engine"
+                and self.pool is None and self.queue):
+            # allocate the engine-lifetime pool ONCE (explicit pool_pages
+            # override, or the engine-global rule over the WHOLE visible
+            # queue — the b largest needs anywhere in it, so a large
+            # request submitted behind small ones still fits when its
+            # turn comes); every later wave borrows the pool, so cached
+            # prefixes survive turnover. Only a request larger than
+            # anything visible at sizing time can fail admission later
+            # (_next_wave raises with guidance).
+            need0 = sorted((self._pages_needed(r, g) for r in self.queue),
+                           reverse=True)
+            b0 = min(self.batch_size, len(self.queue))
+            n_pages = (self._pool_pages_cfg
+                       if self._pool_pages_cfg is not None
+                       else self._pool_budget(need0, b0))
+            self.pool = kvc.PagePool(n_pages, self.page_size)
+            if self.prefix_cache:
+                self.cache = PrefixCache(self.pool)
         reqs = self._next_wave()
         if not reqs:
             return False
         b = len(reqs)
-        g = self.bundle.spec.gamma
         # size caches for the wave plus the next batch of likely refill
         # candidates — not the whole queue, or one huge queued request
         # would inflate every slot's KV/feature allocation; requests that
@@ -232,20 +333,22 @@ class ServingEngine:
         cache = None
         if self.cache_impl == "paged":
             # page-granular sizing: the table is as wide as the largest
-            # candidate needs, but the POOL holds only the worst-case
-            # concurrent set (sum of the b largest candidates) — less
-            # than the dense b * max_len reservation whenever request
-            # sizes are mixed. With the prefix cache on, the pool also
-            # holds the whole candidate window so retired prefixes can be
-            # RETAINED for upcoming traffic instead of thrashing (LRU
-            # eviction reclaims them the moment admission needs pages).
+            # candidate needs (capped at the pool — no row can ever hold
+            # more), while the POOL is sized by _pool_budget: worst-case
+            # concurrent set + prefix-retention headroom, never a per-
+            # candidate sum. Engine scope reuses the engine pool; wave
+            # scope (legacy A/B reference) builds a fresh one per wave.
             need = sorted((self._pages_needed(r, g) for r in cand),
                           reverse=True)
-            mp = need[0]
-            pool_pages = sum(need) if self.prefix_cache else sum(need[:b])
-            pool = kvc.PagePool(pool_pages, self.page_size)
-            if self.prefix_cache:
-                cache = PrefixCache(pool)
+            if self.pool_scope == "engine":
+                pool, cache = self.pool, self.cache
+            else:
+                pool = kvc.PagePool(self._pool_budget(need, b),
+                                    self.page_size)
+                if self.prefix_cache:
+                    cache = PrefixCache(pool)
+            pool_pages = pool.n_pages
+            mp = min(need[0], pool_pages)
             row_pages = [[] for _ in range(b)]
             # all rows start unallocated: table rows hold the out-of-range
             # sentinel until _install patches them
@@ -254,6 +357,16 @@ class ServingEngine:
                                    cache_impl="paged",
                                    page_size=self.page_size,
                                    pool_pages=pool_pages, page_table=table)
+            if self._pools is not None:
+                # borrowed-pool contract: re-install the engine pool's
+                # device buffers so pages the radix tree retained keep
+                # their KV across the turnover; drop our reference — the
+                # wave's first donated install consumes the state.
+                # (engine_init's fresh zero pools are discarded here: a
+                # transient pool-sized alloc per TURNOVER, not per cycle —
+                # plumbing retained buffers into init is a ROADMAP item)
+                state = adopt_pools(state, self._pools)
+                self._pools = None
             # lifetime max, matching pool_peak_pages' scope — a small
             # leftover wave must not shrink the reported pool below the
             # peak measured in an earlier, larger wave
@@ -269,7 +382,8 @@ class ServingEngine:
                          targets=np.zeros((b,), np.int64),
                          t0=time.time(), pool=pool, row_pages=row_pages,
                          cache=cache, row_tables=[None] * b,
-                         row_hits=[None] * b, trunc=np.zeros((b,), bool))
+                         row_hits=[None] * b, trunc=np.zeros((b,), bool),
+                         evictions0=cache.evictions if cache else 0)
         # two passes: install EVERY initial request before the first retire.
         # A retire can chain-refill from beyond the pool-sizing candidate
         # window; interleaving it with the initial installs could hand those
@@ -554,7 +668,15 @@ class ServingEngine:
                 self._util_sum / self._util_samples
                 if self._util_samples else 0.0)
         if w.cache is not None:
-            self.stats["prefix_evictions"] += w.cache.evictions
+            # delta since wave start: an engine-lifetime cache accumulates
+            # evictions across waves and must not be re-counted per wave
+            self.stats["prefix_evictions"] += w.cache.evictions - w.evictions0
+            self.stats["prefix_cached_pages"] = w.cache.cached_pages
+        if w.pool is not None and self.pool_scope == "engine":
+            # borrowed-pool contract: harvest the device pool buffers so
+            # the next wave's state re-adopts them (cached prefix pages
+            # keep their KV across the turnover)
+            self._pools = capture_pools(w.state)
         self.wave = None
 
     # ----------------------------------------------------- drain loop -----

@@ -1,14 +1,19 @@
-"""Radix prefix cache: cross-request page sharing over a wave's PagePool.
+"""Radix prefix cache: cross-request page sharing over a PagePool.
 
 D2SD's candidate organization is built on shared prefixes *inside* a draft
 block; this module applies the same economics *across the request
 population* (vLLM prefix caching / SGLang RadixAttention style). A
 host-side radix tree indexes the committed token strings of retired
-requests; each tree node owns a run of physical pages in the wave's
+requests; each tree node owns a run of physical pages in a
 :class:`~repro.models.kvcache.PagePool` holding the target KV **and both
 drafter feature caches** for its token span (every paged cache of a wave
-shares one page-id space, so one node covers all three). Admitting a
-request whose prompt extends a cached string becomes a page-table splice:
+shares one page-id space, so one node covers all three). The tree lives
+as long as its pool: with the serving engine's default engine-lifetime
+pool the tree OUTLIVES wave turnover — wave N+1's prompts hit prefixes
+committed in wave N (resident serving; the engine carries the device
+pool buffers across via ``core.state.capture_pools``/``adopt_pools``) —
+while a legacy per-wave pool scopes it to one wave. Admitting a request
+whose prompt extends a cached string becomes a page-table splice:
 
 * **match** — longest cached prefix of the prompt (capped at ``P - 1``:
   at least one suffix token must remain to produce the anchor logits);
@@ -27,7 +32,10 @@ request whose prompt extends a cached string becomes a page-table splice:
 * **evict** — under pool pressure, least-recently-used *unpinned* leaf
   nodes are evicted and their pages returned. A node is pinned exactly
   while an in-flight row still reads one of its pages (pool refcount > 1),
-  and eviction refuses pinned nodes.
+  and eviction refuses pinned nodes. Pinning is refcount-based, so it is
+  wave-agnostic: a row in ANY live wave of an engine-lifetime pool holds
+  its read refs until retire, and eviction pressure is engine-global
+  (driven by the shared pool's occupancy, not per-wave sizing).
 
 Everything here is host-side bookkeeping over integer page ids — device
 state is only touched by the engine (COW copy + installs).
@@ -88,7 +96,8 @@ class PrefixHit:
 
 
 class PrefixCache:
-    """Host-side radix tree over committed prefixes of one wave's pool."""
+    """Host-side radix tree over committed prefixes of one pool — per-wave
+    or engine-lifetime, whichever scope the owning engine runs."""
 
     def __init__(self, pool: kvc.PagePool):
         self.pool = pool

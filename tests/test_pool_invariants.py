@@ -1,0 +1,459 @@
+"""Randomized invariant suite for the pool / radix / COW stack.
+
+Drives scripted multi-wave serving schedules (random prompts sharing
+prefix families, random budgets, bursty arrivals so waves really turn
+over) through the engine-lifetime page pool and asserts, after EVERY
+engine step, the global invariants of the refcounted COW page machinery:
+
+* refcounts equal the table + radix-tree reference counts, reconstructed
+  host-side from the live rows' page lists and the tree's node pages;
+* the free list and the referenced set are disjoint;
+* no page appears in two rows' page tables unless its refcount covers
+  every reader;
+* a page with refcount > 1 is never written — enforced behaviorally by
+  :class:`SharedPageWriteMonitor`, which snapshots every shared page's
+  device contents and requires bit-identity for as long as the page stays
+  shared (true write logging is impossible from the host: commits run
+  inside jitted decode cycles, so bit-freezing IS the observable
+  contract).
+
+Also here: cross-wave token parity (legacy per-wave pools vs the
+engine-lifetime pool cache-off/cache-on, plus ``generate_ondevice``
+parity), cached-page survival across wave turnover, LRU eviction under
+multi-wave churn, and the engine-global pool-sizing regression (the old
+prefix-cache rule double-counted likely-refill candidates).
+
+Tier-1 runs the seed-0 schedule; ``scripts/tier1.sh --stress`` adds the
+reroll seeds (marked ``slow``).
+"""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import SpecConfig
+from repro.core import pipeline as pl
+from repro.core.drafter import drafter_init
+from repro.core.state import capture_pools
+from repro.models import lm
+from repro.serving.engine import Request, ServingEngine
+
+from conftest import tiny_target, tiny_drafter, pure_greedy
+
+GAMMA = 4
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    tcfg = tiny_target(vocab=61, dtype="float32")
+    dcfg = tiny_drafter(vocab=61, gamma=GAMMA, dtype="float32",
+                        target_cfg=tcfg)
+    tp = lm.lm_init(jax.random.PRNGKey(0), tcfg)
+    d1 = drafter_init(jax.random.PRNGKey(1), dcfg)
+    d2 = drafter_init(jax.random.PRNGKey(2), dcfg)
+    spec = SpecConfig(gamma=GAMMA, top_k_branches=2, mode="d2sd")
+    return pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
+
+
+def _ref(bundle, prompt, n):
+    return np.asarray(pure_greedy(bundle.target_params, bundle.target_cfg,
+                                  jnp.asarray(prompt)[None], n))[0]
+
+
+# ===================================================== invariant checker ===
+def _live_refs(eng):
+    """(pool, cache, refs, tables): host-side reconstruction of every page
+    reference — tree node pages plus, per live row, its private pages and
+    its hit's shared pages — and the per-row table page sets."""
+    w = eng.wave
+    pool = eng.pool if eng.pool is not None else (w.pool if w else None)
+    cache = eng.cache if eng.cache is not None else (w.cache if w else None)
+    refs = collections.Counter()
+    tables = []
+    if cache is not None:
+        for node in cache._nodes():
+            for _, p in node.pages:
+                refs[p] += 1
+    if w is not None:
+        for slot, r in enumerate(w.requests):
+            if r is None:
+                continue
+            for p in w.row_pages[slot]:
+                refs[p] += 1
+            hit = w.row_hits[slot]
+            if hit is not None:
+                for p in hit.shared:
+                    refs[p] += 1
+            t = w.row_tables[slot]
+            tables.append({int(x) for x in t if int(x) < pool.n_pages})
+    return pool, cache, refs, tables
+
+
+def check_invariants(eng, watch=None):
+    """The global pool/radix/COW invariants, checked between engine steps
+    (install/retire/COW are atomic within a step from the host's view)."""
+    pool, cache, refs, tables = _live_refs(eng)
+    if pool is None:
+        return
+    rc = pool.refcounts()
+    free = pool.free_page_ids
+    for p in range(pool.n_pages):
+        # refcounts == table + tree reference counts, exactly
+        assert rc[p] == refs[p], (
+            f"page {p}: pool refcount {rc[p]} != reconstructed {refs[p]}")
+        # free-list ∩ referenced pages = ∅
+        assert (p in free) == (rc[p] == 0), (
+            f"page {p}: refcount {rc[p]} but free={p in free}")
+    # no page in two tables without a refcount covering every reader
+    occ = collections.Counter()
+    for t in tables:
+        occ.update(t)
+    for p, k in occ.items():
+        if k > 1:
+            assert rc[p] >= k, (
+                f"page {p} in {k} tables but refcount {rc[p]}")
+    pool.sanity_check()
+    if watch is not None:
+        watch.observe(eng)
+
+
+def _page_slices(pools, p):
+    """Host copies of physical page ``p`` from every paged k/v buffer."""
+    out = []
+    for name in sorted(pools):
+        for arr in pools[name]:
+            a = np.asarray(arr)
+            out.append(np.take(a, p, axis=a.ndim - 4).copy())
+    return out
+
+
+class SharedPageWriteMonitor:
+    """Write-logging shim for the COW invariant: a page with refcount > 1
+    must never be written. The device writers (pool_scatter inside jitted
+    cycles, copy_page inside the donated COW jit) cannot be intercepted
+    from the host, so the monitor enforces the observable contract
+    instead — a shared page's contents are snapshotted when it becomes
+    shared and must stay bit-identical at every later observation until
+    its refcount drops back to 1."""
+
+    def __init__(self):
+        self.snaps = {}
+        self.pages_checked = 0
+
+    def observe(self, eng):
+        w = eng.wave
+        pool = eng.pool if eng.pool is not None else (w.pool if w else None)
+        if pool is None or w is None:
+            return
+        rc = pool.refcounts()
+        pools = capture_pools(w.state)
+        for p in [q for q in self.snaps if rc[q] <= 1]:
+            del self.snaps[p]
+        for p in (q for q in range(pool.n_pages) if rc[q] > 1):
+            cur = _page_slices(pools, p)
+            if p in self.snaps:
+                for a, b in zip(self.snaps[p], cur):
+                    assert np.array_equal(a, b), (
+                        f"shared page {p} (refcount {rc[p]}) was written")
+                self.pages_checked += 1
+            else:
+                self.snaps[p] = cur
+
+
+# ======================================================= schedule driver ===
+def _drive(eng, reqs, rng, watch=None):
+    """Scripted schedule: bursty random arrivals interleaved with engine
+    steps, invariants checked after every step. Returns the number of
+    scheduled steps (engine events the invariants were checked after)."""
+    pending = list(reqs)
+    steps = 0
+    while pending or eng.queue or eng.wave is not None:
+        starved = not (eng.queue or eng.wave is not None)
+        if pending and (starved or rng.random() < 0.18):
+            for _ in range(min(int(rng.integers(3, 9)), len(pending))):
+                p, n = pending.pop(0)
+                eng.submit(p, max_new=n)
+        if eng.wave is None:
+            if not eng.queue:
+                continue
+            eng.start_wave()
+        else:
+            eng.step()
+        steps += 1
+        check_invariants(eng, watch)
+    return steps
+
+
+def _stress_traffic(v, rng, n_requests):
+    """Random prompts drawn from shared prefix families (hits, splits,
+    COW) with random budgets (randomized retire times)."""
+    fams = [rng.integers(0, v, size=int(rng.integers(10, 18))).astype(np.int32)
+            for _ in range(3)]
+    reqs = []
+    for _ in range(n_requests):
+        f = fams[int(rng.integers(0, len(fams)))]
+        cut = int(rng.integers(4, len(f) + 1))
+        tail = rng.integers(0, v, size=int(rng.integers(1, 5))).astype(np.int32)
+        reqs.append((np.concatenate([f[:cut], tail]),
+                     int(rng.integers(2, 9))))
+    return reqs
+
+
+STRESS_SEEDS = [0] + [pytest.param(s, marks=pytest.mark.slow)
+                      for s in (1, 2, 3)]
+
+
+@pytest.mark.parametrize("seed", STRESS_SEEDS)
+def test_randomized_pool_invariants(bundle, seed):
+    """≥200-step randomized multi-wave schedule with zero refcount /
+    free-list / shared-page-write violations (the PR acceptance
+    criterion). Seed 0 is the tier-1 gate; the rerolls are the --stress
+    variant."""
+    rng = np.random.default_rng(seed)
+    v = bundle.target_cfg.vocab_size
+    reqs = _stress_traffic(v, rng, 120)
+    eng = ServingEngine(bundle, batch_size=2, cache_impl="paged",
+                        page_size=PAGE, prefix_cache=True,
+                        bucket_sizes=(8, 16, 32), pool_headroom=0.75,
+                        seed=seed)
+    watch = SharedPageWriteMonitor()
+    # three drain-to-empty chunks: every chunk boundary is a guaranteed
+    # wave turnover, so the schedule always exercises the cross-wave
+    # retention path regardless of how the bursty arrivals land
+    steps = sum(_drive(eng, reqs[i::3], rng, watch) for i in range(3))
+    assert steps >= 200, steps
+    assert len(eng.done) == len(reqs)
+    assert eng.stats["waves"] >= 3, "schedule never turned a wave over"
+    assert eng.stats["prefix_hits"] > 0, "families never produced a hit"
+    assert watch.pages_checked > 0, "no shared page was ever observed"
+    # drained: every surviving page belongs to the tree, refs balanced
+    check_invariants(eng, watch)
+    assert eng.pool.pages_in_use == eng.cache.cached_pages
+
+
+# ==================================================== cross-wave parity ====
+def _phased_traffic(bundle, seed=11):
+    """Phase 2 prompts extend phase 1's committed strings (prompt +
+    greedy answer), so serving phase 2 after a wave turnover exercises
+    cross-wave prefix hits."""
+    v = bundle.target_cfg.vocab_size
+    rng = np.random.default_rng(seed)
+    sysp = rng.integers(0, v, size=13).astype(np.int32)
+    phase1 = []
+    for i in range(3):
+        tail = rng.integers(0, v, size=4 + i).astype(np.int32)
+        phase1.append((np.concatenate([sysp, tail]), 5))
+    phase2 = []
+    for p, n in phase1[:2]:
+        ans = _ref(bundle, p, n)
+        phase2.append((np.concatenate(
+            [p, ans, rng.integers(0, v, size=3).astype(np.int32)]), 4))
+    return phase1, phase2
+
+
+def _serve_phases(bundle, phases, **kw):
+    eng = ServingEngine(bundle, batch_size=2, cache_impl="paged",
+                        page_size=PAGE, **kw)
+    marks = []
+    for reqs in phases:
+        for p, n in reqs:
+            eng.submit(p, max_new=n)
+        eng.run()
+        marks.append(dict(eng.stats))
+    return eng, marks
+
+
+def test_cross_wave_parity_legacy_vs_engine_pool(bundle):
+    """Identical multi-wave traffic through per-wave pools (legacy), the
+    engine-lifetime pool cache-off, and cache-on: per-request tokens
+    must be identical, the cache-on run must hit prefixes cached in the
+    PREVIOUS wave, and the outputs must match ``generate_ondevice``."""
+    phases = _phased_traffic(bundle)
+    e_legacy, _ = _serve_phases(bundle, phases, pool_scope="wave")
+    e_off, _ = _serve_phases(bundle, phases)
+    e_on, marks = _serve_phases(bundle, phases, prefix_cache=True)
+    outs = lambda e: {r.uid: r.out.tolist() for r in e.done}  # noqa: E731
+    assert outs(e_legacy) == outs(e_off) == outs(e_on)
+    assert e_on.stats["waves"] >= 2
+    # hits recorded AFTER the first turnover: phase 2 matched strings the
+    # tree committed in phase 1's wave (the resident-server fast path)
+    assert (marks[1]["prefix_hit_tokens"]
+            > marks[0]["prefix_hit_tokens"]), marks
+    # legacy per-wave pools cannot carry prefixes across run() calls
+    assert e_legacy.stats["prefix_hits"] == 0
+    # per-request parity against each request's standalone greedy decode
+    for r in sorted(e_on.done, key=lambda r: r.uid):
+        prompt = ([p for ph in phases for p, _ in ph])[r.uid]
+        assert np.array_equal(r.out, _ref(bundle, prompt, r.max_new)), r.uid
+    # ondevice-loop coverage: same shapes -> one trace, token-identical
+    (p1, n1), (p2, n2) = phases[0][0], phases[0][1]
+    for p, n, uid in ((p1, n1, 0), (p2, n2, 1)):
+        dev = pl.generate_ondevice(bundle, jnp.asarray(p)[None], max_new=n)
+        assert np.array_equal(np.asarray(dev["tokens"])[0],
+                              outs(e_on)[uid]), uid
+
+
+def test_cached_pages_survive_wave_turnover(bundle):
+    """The borrowed-pool contract end to end: device contents of every
+    page the radix tree owns are bit-identical before and after a wave
+    turnover (capture_pools -> engine_init -> adopt_pools)."""
+    phases = _phased_traffic(bundle, seed=17)
+    eng = ServingEngine(bundle, batch_size=2, cache_impl="paged",
+                        page_size=PAGE, prefix_cache=True)
+    for p, n in phases[0]:
+        eng.submit(p, max_new=n)
+    eng.run()
+    assert eng.wave is None and eng._pools is not None
+    tree_pages = sorted({p for node in eng.cache._nodes()
+                         for _, p in node.pages})
+    assert tree_pages, "phase 1 cached nothing"
+    before = {p: _page_slices(eng._pools, p) for p in tree_pages}
+    for p, n in phases[1]:
+        eng.submit(p, max_new=n)
+    assert eng.start_wave()
+    survivors = {p for node in eng.cache._nodes() for _, p in node.pages}
+    after_pools = capture_pools(eng.wave.state)
+    checked = 0
+    for p in tree_pages:
+        if p not in survivors:
+            continue                      # evicted under phase-2 pressure
+        for a, b in zip(before[p], _page_slices(after_pools, p)):
+            assert np.array_equal(a, b), f"cached page {p} changed"
+        checked += 1
+    assert checked > 0
+    eng.run()
+    assert eng.stats["prefix_hits"] > 0
+
+
+# ================================================= eviction under churn ====
+def test_eviction_under_churn_across_waves(bundle):
+    """Fill the engine pool across several waves, then admit a worst-case
+    cold prompt: LRU eviction reclaims unpinned leaves only (live rows'
+    pages are protected by their refcounts — verified by the invariant
+    checks after every step), and re-admitting an evicted prefix is a
+    clean miss with correct output (no stale page-table reads)."""
+    v = bundle.target_cfg.vocab_size
+    g = GAMMA
+    rng = np.random.default_rng(23)
+    fam = [rng.integers(0, v, size=14).astype(np.int32) for _ in range(3)]
+    mk_tail = lambda k: rng.integers(0, v, size=k).astype(np.int32)  # noqa
+    eng = ServingEngine(bundle, batch_size=2, cache_impl="paged",
+                        page_size=PAGE, prefix_cache=True,
+                        pool_headroom=0.5)
+    watch = SharedPageWriteMonitor()
+    # several waves of family traffic fill the tree up to the headroom
+    for f in fam:
+        reqs = [(np.concatenate([f, mk_tail(3)]), 4),
+                (np.concatenate([f, mk_tail(5)]), 4)]
+        _drive(eng, reqs, rng, watch)
+        assert eng.wave is None
+    filled = eng.cache.cached_pages
+    assert filled > 0
+    # worst-case cold prompt: needs more pages than are free -> eviction
+    cold_prompt, cold_new = rng.integers(0, v, size=30).astype(np.int32), 6
+    cold_req = Request(uid=-1, prompt=cold_prompt, max_new=cold_new)
+    assert eng._pages_needed(cold_req, g) > eng.pool.free_pages
+    _drive(eng, [(cold_prompt, cold_new)], rng, watch)
+    assert eng.stats["prefix_evictions"] > 0
+    # re-admission of an evicted prefix: find a family whose string no
+    # longer matches -> clean miss, output still exact
+    missed = [f for f in fam if eng.cache.lookup(
+        np.concatenate([f, [0]]).astype(np.int32)) is None]
+    assert missed, "cold admission evicted nothing from the families"
+    misses0 = eng.stats["prefix_misses"]
+    probe_prompt, probe_new = np.concatenate([missed[0], mk_tail(2)]), 4
+    _drive(eng, [(probe_prompt, probe_new)], rng, watch)
+    assert eng.stats["prefix_misses"] > misses0
+    done = {r.uid: r for r in eng.done}
+    probe_out = done[max(done)]
+    assert np.array_equal(probe_out.out, _ref(bundle, probe_prompt,
+                                              probe_new)), "stale read"
+    check_invariants(eng, watch)
+
+
+# ============================================== sizing-rule regression =====
+def test_pool_sizing_no_refill_double_count(bundle):
+    """Regression: the prefix-cache pool previously sized itself as
+    ``sum(need)`` over the whole candidate window — counting likely-refill
+    candidates' full needs ON TOP of the live set they refill into. The
+    engine-global rule pins the budget to live-set + headroom."""
+    v = bundle.target_cfg.vocab_size
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(0, v, size=9).astype(np.int32)
+               for _ in range(6)]                  # 6 identical-need reqs
+    g = bundle.spec.gamma
+
+    def sized(prefix_cache, **kw):
+        eng = ServingEngine(bundle, batch_size=2, cache_impl="paged",
+                            page_size=PAGE, prefix_cache=prefix_cache, **kw)
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        k = eng._pages_needed(eng.queue[0], g)
+        assert eng.start_wave()
+        return eng, k
+
+    eng, k = sized(True, pool_headroom=0.25)
+    live = 2 * k
+    assert eng.pool.n_pages == live + int(np.ceil(0.25 * live))
+    # the old window-sum rule (4 candidates) would have over-allocated
+    assert eng.pool.n_pages < 4 * k
+    # cache-off engine pool: live set only, no retention headroom
+    eng_off, k = sized(False)
+    assert eng_off.pool.n_pages == 2 * k
+    # explicit override wins
+    eng_ovr, _ = sized(True, pool_pages=4 * k + 1)
+    assert eng_ovr.pool.n_pages == 4 * k + 1
+    for e in (eng, eng_off, eng_ovr):
+        e.run()
+        assert len(e.done) == len(prompts)
+
+
+def test_engine_pool_too_small_raises(bundle):
+    """A head request that can never fit the fixed engine pool must fail
+    loudly at start_wave, not hang or corrupt."""
+    v = bundle.target_cfg.vocab_size
+    eng = ServingEngine(bundle, batch_size=2, cache_impl="paged",
+                        page_size=PAGE, pool_pages=2)
+    eng.submit(np.arange(20, dtype=np.int32) % v, max_new=8)
+    with pytest.raises(RuntimeError, match="pool"):
+        eng.start_wave()
+
+
+def test_engine_pool_sized_for_large_queued_request(bundle):
+    """Auto-sizing must scan the WHOLE visible queue: a large request
+    submitted behind a burst of small ones (beyond the first wave's
+    candidate window) still gets a pool it fits and completes — the
+    per-wave pools served this traffic, so the engine pool must too."""
+    v = bundle.target_cfg.vocab_size
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, v, size=6).astype(np.int32)
+               for _ in range(5)] + [rng.integers(0, v, size=50)
+                                     .astype(np.int32)]
+    eng = ServingEngine(bundle, batch_size=2, cache_impl="paged",
+                        page_size=PAGE)
+    for p in prompts:
+        eng.submit(p, max_new=4)
+    g = GAMMA
+    assert (eng._pages_needed(eng.queue[-1], g)
+            > 2 * eng._pages_needed(eng.queue[0], g))
+    eng.run()
+    assert len(eng.done) == len(prompts)
+    assert eng._pages_needed(
+        Request(uid=-1, prompt=prompts[-1], max_new=4), g) \
+        <= eng.pool.n_pages
+    for r in eng.done:
+        assert np.array_equal(r.out, _ref(bundle, prompts[r.uid],
+                                          r.max_new)), r.uid
+
+
+def test_pool_pages_requires_engine_scope(bundle):
+    """An explicit pool_pages override is meaningless for per-wave pools
+    (and dense caches) and must be rejected, not silently ignored."""
+    with pytest.raises(ValueError, match="pool_pages"):
+        ServingEngine(bundle, cache_impl="paged", pool_scope="wave",
+                      pool_pages=64)
+    with pytest.raises(ValueError, match="pool_pages"):
+        ServingEngine(bundle, cache_impl="dense", pool_pages=64)
