@@ -35,7 +35,8 @@ def main() -> None:
                 ("engine", lambda q: engine_bench.run(q)),
                 ("serving", lambda q: serving_bench.run(q)),
                 ("prefix", lambda q: serving_bench.run_prefix(q)),
-                ("resident", lambda q: serving_bench.run_resident(q))]
+                ("resident", lambda q: serving_bench.run_resident(q)),
+                ("sla", lambda q: serving_bench.run_sla(q))]
 
     study_dir = Path(__file__).resolve().parents[1] / "experiments" / "study"
     if not args.skip_study:

@@ -3,6 +3,8 @@
 #
 #   scripts/tier1.sh            # == JAX_PLATFORMS=cpu PYTHONPATH=src pytest -x -q
 #   scripts/tier1.sh --fast     # skip slow AND pallas interpret-mode kernels
+#                               # (slow = statistical sweeps, pool-invariant
+#                               # rerolls, long open-loop traffic replays)
 #   scripts/tier1.sh --stress   # randomized pool/radix/COW invariant suite:
 #                               # the fixed tier-1 seed PLUS the reroll seeds
 #                               # (marked `slow`, see tests/test_pool_invariants.py)

@@ -85,20 +85,31 @@ def drafter_init(key, dcfg: DrafterConfig):
 # ----------------------------------------------------------- feature cache --
 def init_feat_cache(dcfg: DrafterConfig, batch: int, max_len: int,
                     dtype=jnp.bfloat16, cache_impl: str = "dense",
-                    page_size: int = 64, pool_pages=None, page_table=None):
+                    page_size: int = 64, pool_pages=None, page_table=None,
+                    ext_pool=None):
     """Dense: k/v [L, B, S_max, Hkv, Dh]. Paged: stacked page pools
     [L, P, page, Hkv, Dh] plus the wave's shared page table ``pt``
     [B, max_pages] (same page-id space as the target KV pools, so one
-    host allocation covers every cache of a row)."""
+    host allocation covers every cache of a row). ``ext_pool`` (paged):
+    retained ``(k, v)`` device buffers from a previous wave adopted in
+    place of fresh zeroed pools (borrowed-pool wave turnover)."""
     l, hkv, dh = dcfg.num_layers, dcfg.num_kv_heads, dcfg.head_dim
     if cache_impl == "paged":
         pool_pages, page_table = kvc.default_page_layout(
             batch, max_len, page_size, pool_pages, page_table)
+        if ext_pool is not None:
+            k, v = ext_pool
+            assert k.shape == (l, pool_pages, page_size, hkv, dh) \
+                and k.dtype == dtype, ("retained feature-pool geometry "
+                                       "mismatch", k.shape)
+        else:
+            k = kvc.init_pool(pool_pages, page_size, hkv, dh, dtype,
+                              lead=(l,))
+            v = kvc.init_pool(pool_pages, page_size, hkv, dh, dtype,
+                              lead=(l,))
         return {
-            "k": kvc.init_pool(pool_pages, page_size, hkv, dh, dtype,
-                               lead=(l,)),
-            "v": kvc.init_pool(pool_pages, page_size, hkv, dh, dtype,
-                               lead=(l,)),
+            "k": k,
+            "v": v,
             # copy=True: every paged cache holds its own table buffer so
             # the whole state can be donated (no twice-donated aliases)
             "pt": jnp.array(page_table, jnp.int32, copy=True),

@@ -27,14 +27,25 @@ in-place row splice).
 Pool ownership is external (the borrowed-pool contract): a serving wave's
 state *borrows* its page-pool buffers from the engine-lifetime
 ``PagePool`` — :func:`capture_pools` harvests them at wave turnover and
-:func:`adopt_pools` re-installs them into the next wave's state, so pages
-the radix prefix cache retained keep their KV across ``start_wave``.
+:func:`engine_init` re-adopts them directly into the next wave's state
+(``pools=``, skipping the transient zero allocation; :func:`adopt_pools`
+is the post-hoc variant for states built elsewhere), so pages the radix
+prefix cache retained keep their KV across ``start_wave``. The same
+contract extends INSIDE a wave to overlapped installs: every install
+(:func:`install_row` / the batched :func:`install_rows`) donates the wave
+state and writes only freshly allocated pages plus its own page-table
+rows and dense-leaf rows, so the host may dispatch installs for idle
+slots while a decode cycle for the *other* rows is still in flight on
+device — the two operations touch disjoint pages/rows, and JAX's async
+dispatch serializes them on the donated state without a host sync. The
+only host read of device state an install needs (the prefilled anchor
+token) is deferred by the engine to the next retire boundary.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -185,7 +196,8 @@ def _adopt_dict(dst, src, row, src_row, axis_for):
 
 def engine_init(bundle, batch: int, max_len: int, ctx_len: int = 0,
                 cache_impl: str = "dense", page_size: int = 64,
-                pool_pages=None, page_table=None) -> EngineState:
+                pool_pages=None, page_table=None,
+                pools: Optional[Dict[str, Any]] = None) -> EngineState:
     """Allocate caches for a request wave (``bundle``: pipeline.SpecBundle).
 
     cache_impl="paged": every paged cache of the wave (target global KV
@@ -194,23 +206,36 @@ def engine_init(bundle, batch: int, max_len: int, ctx_len: int = 0,
     pool. Defaults reproduce the allocator-free identity layout (row i
     owns pages [i*MP, (i+1)*MP)) used by ``generate``; the serving engine
     passes an initially-unallocated table and patches rows at install.
+
+    pools: retained device pool buffers from :func:`capture_pools` of the
+    previous wave (the borrowed-pool contract). Caches named in it adopt
+    the retained buffers DIRECTLY at init — the transient pool-sized zero
+    allocation a post-hoc ``adopt_pools`` would immediately discard is
+    never materialized. Geometry must match the allocation this call
+    would have made; the caller must drop its own reference once the
+    wave's first donated install consumes the state.
     """
     tcfg = bundle.target_cfg
     dt = jnp.dtype(tcfg.dtype)
     if cache_impl == "paged":
         pool_pages, page_table = kvc.default_page_layout(
             batch, max_len, page_size, pool_pages, page_table)
+    else:
+        assert not pools, "retained pool buffers require cache_impl='paged'"
+    pools = pools or {}
     kw = dict(cache_impl=cache_impl, page_size=page_size,
               pool_pages=pool_pages, page_table=page_table)
+    tgt_pools = {name[len("target/"):]: kv for name, kv in pools.items()
+                 if name.startswith("target/")}
     return EngineState(
         target=lm.init_states(tcfg, batch, max_len, ctx_len=ctx_len,
-                              dtype=dt, **kw),
+                              dtype=dt, ext_pools=tgt_pools or None, **kw),
         d1_feat=dr.init_feat_cache(bundle.d1_cfg, batch, max_len,
                                    dtype=jnp.dtype(bundle.d1_cfg.dtype),
-                                   **kw),
+                                   ext_pool=pools.get("d1_feat"), **kw),
         d2_feat=dr.init_feat_cache(bundle.d2_cfg, batch, max_len,
                                    dtype=jnp.dtype(bundle.d2_cfg.dtype),
-                                   **kw),
+                                   ext_pool=pools.get("d2_feat"), **kw),
         anchor=jnp.zeros((batch,), jnp.int32),
         active=jnp.ones((batch,), bool),
     )
@@ -279,25 +304,27 @@ def prefill(bundle, state: EngineState, prompts, key=None, ctx=None,
 
 
 # ------------------------------------------------------- slot install -------
-def _zeros_row(a, ax):
+def _zeros_rows(a, ax, k):
     if not hasattr(a, "ndim") or a.ndim == 0:
         return a
-    return jnp.zeros_like(jax.lax.slice_in_dim(a, 0, 1, axis=ax))
+    return jnp.zeros(a.shape[:ax] + (k,) + a.shape[ax + 1:], a.dtype)
 
 
-def row_template(state: EngineState, row_table) -> EngineState:
-    """Batch-1 install target *sharing* this wave's page pools.
+def rows_template(state: EngineState, row_tables) -> EngineState:
+    """Batch-K install target *sharing* this wave's page pools.
 
-    ``row_table`` [max_pages] int32: the physical pages the host allocator
-    granted the incoming request (unallocated slots = the out-of-range
-    sentinel). Dense leaves (local rolling KV, recurrent states, lengths,
-    anchor) become zeroed batch-1 rows; paged pools are passed by
-    reference with the one-row table, so a ``prefill`` on the result
-    writes the prompt's KV directly into the wave's pools at the new
-    pages. ``adopt_row`` afterwards only patches the page-table row and
-    splices the small dense leaves — the copy-free refill contract.
+    ``row_tables`` [K, max_pages] int32: one row of physical pages per
+    incoming request (unallocated slots = :data:`kvc.PAGE_SENTINEL`).
+    Dense leaves (local rolling KV, recurrent states, lengths, anchor)
+    become zeroed batch-K rows; paged pools are passed by reference with
+    the K-row table, so a ``prefill`` on the result writes every
+    request's KV directly into the wave's pools at its own pages.
+    ``adopt_row(..., src_row=i)`` afterwards only patches page-table rows
+    and splices the small dense leaves — the copy-free refill contract,
+    K requests per donated trace.
     """
-    rt = jnp.asarray(row_table, jnp.int32)[None]            # [1, MP]
+    rt = jnp.asarray(row_tables, jnp.int32)                 # [K, MP]
+    k = rt.shape[0]
 
     def blk(d, axis_for):
         paged = kvc.is_paged(d)
@@ -307,11 +334,11 @@ def row_template(state: EngineState, row_table) -> EngineState:
                 out[name] = v
             elif name == "pt":
                 out[name] = jnp.broadcast_to(
-                    rt, v.shape[:-2] + (1, v.shape[-1]))
+                    rt, v.shape[:-2] + (k, v.shape[-1]))
             else:
                 ax = axis_for(name)
                 out[name] = jax.tree.map(
-                    lambda a, x=ax: _zeros_row(a, x), v)
+                    lambda a, x=ax: _zeros_rows(a, x, k), v)
         return out
 
     target = {}
@@ -319,14 +346,19 @@ def row_template(state: EngineState, row_table) -> EngineState:
         if isinstance(v, dict):
             target[name] = blk(v, lambda _n, a=lm.state_batch_axis(name): a)
         else:
-            target[name] = _zeros_row(v, 0)
+            target[name] = _zeros_rows(v, 0, k)
     return EngineState(
         target=target,
         d1_feat=blk(state.d1_feat, _feat_axis),
         d2_feat=blk(state.d2_feat, _feat_axis),
-        anchor=jnp.zeros((1,), jnp.int32),
-        active=jnp.ones((1,), bool),
+        anchor=jnp.zeros((k,), jnp.int32),
+        active=jnp.ones((k,), bool),
     )
+
+
+def row_template(state: EngineState, row_table) -> EngineState:
+    """Batch-1 :func:`rows_template` (``row_table`` [max_pages])."""
+    return rows_template(state, jnp.asarray(row_table, jnp.int32)[None])
 
 
 def _with_lengths(sub: EngineState, length) -> EngineState:
@@ -476,6 +508,65 @@ def install_row(bundle, state: EngineState, row, prompt, key=None,
                                 prompt, key, row_table,
                                 temperature=temperature, ctx_len=ctx_len,
                                 prefix_hit=prefix_hit, true_len=true_len)
+
+
+def _install_rows_impl(bundle, state, rows, prompts, key, row_tables,
+                       temperature: float, ctx_len: int, true_len=None):
+    k = prompts.shape[0]
+    if state.cache_impl == "paged":
+        sub = rows_template(state, row_tables)
+    else:
+        sub = engine_init(bundle, k, state.max_len, ctx_len=ctx_len)
+    sub = prefill(bundle, sub, prompts, key=key, temperature=temperature,
+                  true_len=true_len)
+    # K static adopts: paged pools pass through wholesale (every row's
+    # prefill writes already landed in the shared pools), so each adopt
+    # is one page-table row patch + small dense-leaf splices
+    for i in range(k):
+        state = state.adopt_row(rows[i], sub, src_row=i)
+    return state
+
+
+# Donated batched install: one trace per (K, prompt-bucket length, state
+# shapes); `rows` and `row_tables` are traced.
+_install_rows_donated = functools.partial(
+    jax.jit, static_argnames=("temperature", "ctx_len"),
+    donate_argnames=("state",))(_install_rows_impl)
+
+
+def install_rows(bundle, state: EngineState, rows, prompts, key=None,
+                 temperature: float = 0.0, row_tables=None,
+                 ctx_len: int = 0, true_len=None) -> EngineState:
+    """Batched serving install: prefill K same-length prompts into K rows
+    under ONE donated jit call — the multi-slot analogue of
+    :func:`install_row`, collapsing K per-request installs (K dispatches,
+    K batch-1 prefills) into one batch-K prefill plus K in-place row
+    splices. The async front-end uses it to drain same-length-bucket
+    admission groups during the overlap window.
+
+    rows:       [K] slot indices (traced).
+    prompts:    [K, P] int32, all padded to one bucket length.
+    row_tables: [K, max_pages] allocated pages per request (paged only).
+    true_len:   [K] real prompt lengths under bucket padding.
+
+    Semantics note: sampling (temperature > 0) draws the K anchors from
+    one shared key — not bitwise-identical to K per-request keys — and
+    prefix-cache warm starts need per-row COW orchestration, so the
+    engine only routes temperature-0, cold installs here (greedy anchors
+    are key-independent, making the batched path token-identical to K
+    single installs; asserted by tests/test_frontend.py).
+    """
+    prompts = jnp.asarray(prompts, jnp.int32)
+    rows = jnp.asarray(rows, jnp.int32)
+    if state.cache_impl == "paged":
+        assert row_tables is not None, "paged install needs allocated pages"
+        row_tables = jnp.asarray(row_tables, jnp.int32)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if true_len is not None:
+        true_len = jnp.asarray(true_len, jnp.int32)
+    return _install_rows_donated(bundle, state, rows, prompts, key,
+                                 row_tables, temperature=temperature,
+                                 ctx_len=ctx_len, true_len=true_len)
 
 
 def prefill_row(bundle, state: EngineState, row, prompt, key=None, ctx=None,

@@ -60,6 +60,30 @@ def main():
                          "worst-case concurrent live set (prefix cache "
                          "only; default 1.0 = retain up to one live-set's "
                          "worth of cached prefixes)")
+    ap.add_argument("--traffic", default=None,
+                    choices=["poisson", "bursty"],
+                    help="open-loop serving: replay a seeded arrival trace "
+                         "(poisson = memoryless, bursty = 2-state MMPP "
+                         "clumps) through the async front-end instead of "
+                         "submitting a fixed batch; per-request TTFT/TPOT "
+                         "SLA percentiles are reported")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="open-loop arrival rate in requests/s "
+                         "(with --traffic)")
+    ap.add_argument("--duration", type=float, default=30.0,
+                    help="open-loop trace length in seconds "
+                         "(with --traffic)")
+    ap.add_argument("--traffic-seed", type=int, default=0,
+                    help="arrival-trace seed (with --traffic); the same "
+                         "seed replays the identical trace")
+    ap.add_argument("--sync-baseline", action="store_true",
+                    help="drive the trace with the synchronous baseline "
+                         "(refill only at retire moments) instead of the "
+                         "overlapped front-end (with --traffic)")
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="replay in deterministic simulated time (1 s per "
+                         "decode cycle) instead of wall time "
+                         "(with --traffic)")
     args = ap.parse_args()
 
     if args.random:
@@ -93,6 +117,52 @@ def main():
                 ap.error(f"--bucket-sizes must be positive ints, got "
                          f"{args.bucket_sizes!r}")
             kw["bucket_sizes"] = buckets
+    if args.traffic is not None:
+        from repro.serving.frontend import ReplayDriver
+        from repro.serving.metrics import (MetricsRecorder, MonotonicClock,
+                                           VirtualClock)
+        from repro.serving.traffic import make_trace
+        clock = VirtualClock() if args.virtual_clock else MonotonicClock()
+        rec = MetricsRecorder(clock)
+        trace = make_trace(args.traffic, args.rate, args.duration,
+                           seed=args.traffic_seed,
+                           max_new=args.max_new,
+                           vocab=bundle.target_cfg.vocab_size,
+                           tasks=(args.task,))
+        pool_pages = args.pool_pages
+        if args.cache_impl == "paged" and pool_pages is None:
+            # the engine's auto-sizing rule sees only the queue at the
+            # first wave — under open-loop traffic that may be a single
+            # request. The launcher has the whole trace, so size the
+            # pool for the worst-case concurrent set up front.
+            g = bundle.spec.gamma
+            per = max(-(-(a.prompt_len + a.max_new + 2 * g + 8)
+                        // args.page_size) for a in trace)
+            pool_pages = 2 * args.requests * per
+        eng = ServingEngine(bundle, batch_size=args.requests,
+                            cache_impl=args.cache_impl,
+                            page_size=args.page_size,
+                            prefix_cache=args.prefix_cache,
+                            pool_scope=args.pool_scope,
+                            pool_pages=pool_pages,
+                            pool_headroom=args.pool_headroom,
+                            clock=clock, recorder=rec, **kw)
+        stats = ReplayDriver(eng, trace,
+                             overlap=not args.sync_baseline).run()
+        sla = stats["sla"]
+        driver = "sync" if args.sync_baseline else "overlapped"
+        print(f"mode={args.mode} traffic={args.traffic} rate={args.rate} "
+              f"driver={driver} served {len(eng.done)}/{len(trace)} | "
+              f"cycles={stats['engine_cycles']} "
+              f"alpha={stats.get('alpha', 0):.2f}")
+        print(f"  ttft p50={sla['ttft']['p50']:.2f}s "
+              f"p99={sla['ttft']['p99']:.2f}s | "
+              f"tpot p50={sla['tpot']['p50']:.3f}s "
+              f"p99={sla['tpot']['p99']:.3f}s | "
+              f"e2e p99={sla['e2e']['p99']:.2f}s | "
+              f"queue max={sla['queue_depth']['max']}")
+        return
+
     eng = ServingEngine(bundle, batch_size=args.requests,
                         cache_impl=args.cache_impl,
                         page_size=args.page_size,

@@ -110,7 +110,8 @@ def block_init(key, cfg: ModelConfig, spec: BlockSpec2):
 def block_state_init(cfg: ModelConfig, spec: BlockSpec2, batch: int,
                      max_len: int, ctx_len: int = 0, dtype=jnp.bfloat16,
                      cache_impl: str = "dense", page_size: int = 64,
-                     pool_pages: int = 0, page_table=None):
+                     pool_pages: int = 0, page_table=None,
+                     alloc_pool: bool = True):
     """Per-layer decoding state.
 
     cache_impl="paged": *global* attention layers store their KV as a
@@ -119,12 +120,20 @@ def block_state_init(cfg: ModelConfig, spec: BlockSpec2, batch: int,
     layers keep dense rolling buffers (window-capped capacity; rolling
     position recovery does not compose with page indirection), and
     recurrent / rwkv states are untouched.
+
+    alloc_pool=False: leave the paged k/v pools as None placeholders —
+    the caller substitutes retained device buffers (borrowed-pool wave
+    turnover) and the zeroed pool allocation is skipped entirely.
     """
     st: Dict[str, Any] = {}
     hkv, dh = cfg.num_kv_heads, cfg.head_dim
     if spec.kind == "global" and cache_impl == "paged":
-        st["k"] = kvc.init_pool(pool_pages, page_size, hkv, dh, dtype)
-        st["v"] = kvc.init_pool(pool_pages, page_size, hkv, dh, dtype)
+        if alloc_pool:
+            st["k"] = kvc.init_pool(pool_pages, page_size, hkv, dh, dtype)
+            st["v"] = kvc.init_pool(pool_pages, page_size, hkv, dh, dtype)
+        else:
+            st["k"] = None
+            st["v"] = None
         # copy=True: the wave-level table is shared by every paged cache;
         # each leaf needs its own buffer or donating the state fails with
         # "attempt to donate the same buffer twice"

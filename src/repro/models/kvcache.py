@@ -72,6 +72,7 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.distributed.sharding import constrain
 
@@ -119,6 +120,17 @@ def constrain_cache(cache, kv_seq_sharded: bool = False):
 # ===========================================================================
 # Paged subsystem
 # ===========================================================================
+
+#: Page-table entry marking an unallocated logical page. Growth-stable:
+#: int32 max can never collide with a real page id even if the pool is
+#: later grown in place, unlike the old ``n_pages`` sentinel (a pool grown
+#: from P to P' pages would silently turn every stale ``P`` sentinel into
+#: a live alias of physical page P). Every consumer treats it as
+#: out-of-range: reads clamp + mask (:func:`pool_view`, the cascade
+#: kernel's ``jnp.minimum(table, n_phys - 1)``), writes drop
+#: (:func:`pool_scatter` ``mode="drop"``).
+PAGE_SENTINEL = np.iinfo(np.int32).max
+
 
 def is_paged(cache_dict) -> bool:
     """A cache/state dict is paged iff it carries a page table."""
@@ -190,7 +202,7 @@ def pool_view(pool, table):
     table [B, max_pages] (stacked copies accepted) ->
     [B, MP*page, H, D] (or [L, B, MP*page, H, D]).
 
-    Out-of-range table entries (the ``pool_pages`` sentinel marking
+    Out-of-range table entries (the :data:`PAGE_SENTINEL` marking
     unallocated logical pages) clamp to the last physical page; the
     garbage they surface sits at logical positions >= the row length and
     is masked by every consumer. This is the jnp reference read path; the
@@ -355,10 +367,9 @@ class PagePool:
 
     def row_table(self, pages: Sequence[int], max_pages: int):
         """[max_pages] int32 row table: allocated pages first, then the
-        out-of-range sentinel (``n_pages``) marking unallocated slots —
+        growth-stable :data:`PAGE_SENTINEL` marking unallocated slots —
         reads clamp+mask, writes drop."""
-        import numpy as np
-        t = np.full((max_pages,), self.n_pages, np.int32)
+        t = np.full((max_pages,), PAGE_SENTINEL, np.int32)
         t[: len(pages)] = pages
         return t
 

@@ -50,7 +50,7 @@ def lm_init(key, cfg: ModelConfig):
 def init_states(cfg: ModelConfig, batch: int, max_len: int, ctx_len: int = 0,
                 dtype=jnp.bfloat16, cache_impl: str = "dense",
                 page_size: int = 64, pool_pages: Optional[int] = None,
-                page_table=None):
+                page_table=None, ext_pools=None):
     """Allocate per-layer decode states.
 
     cache_impl="paged": global-attention KV lives in page pools shared
@@ -59,24 +59,47 @@ def init_states(cfg: ModelConfig, batch: int, max_len: int, ctx_len: int = 0,
     ``pool_pages = batch * ceil(max_len/page_size)``). The table is
     replicated into every paged block state (tiny int32) so the scanned
     stack threads it with no extra forward arguments.
+
+    ext_pools: optional ``{state_key: (k_pool, v_pool)}`` of retained
+    device pool buffers (``core.state.capture_pools`` of a previous
+    wave). Named entries adopt the external buffers instead of allocating
+    fresh zeroed pools — no transient pool-sized allocation at wave
+    turnover. Stacked-period entries ("p{j}") expect the already-stacked
+    ``[n_periods, P, page, H, D]`` buffers capture harvested.
     """
     spec, n_periods, tail = period_spec(cfg)
     if cache_impl == "paged":
         pool_pages, page_table = kvcache.default_page_layout(
             batch, max_len, page_size, pool_pages, page_table)
+    ext_pools = ext_pools or {}
+    assert not ext_pools or cache_impl == "paged", \
+        "retained pool buffers require cache_impl='paged'"
     kw = dict(cache_impl=cache_impl, page_size=page_size,
               pool_pages=pool_pages or 0, page_table=page_table)
     states: Dict[str, Any] = {}
     if n_periods > 0:
         for j, bs in enumerate(spec):
             one = block_state_init(cfg, bs, batch, max_len, ctx_len, dtype,
-                                   **kw)
+                                   alloc_pool=f"p{j}" not in ext_pools, **kw)
+            # None pool placeholders are empty pytree nodes: tree.map
+            # skips them, so no zeroed pool is ever materialized here
             states[f"p{j}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy()
                 if n_periods > 1 else a[None], one)
     for i, bs in enumerate(tail):
-        states[f"tail{i}"] = block_state_init(cfg, bs, batch, max_len,
-                                              ctx_len, dtype, **kw)
+        states[f"tail{i}"] = block_state_init(
+            cfg, bs, batch, max_len, ctx_len, dtype,
+            alloc_pool=f"tail{i}" not in ext_pools, **kw)
+    for name, (k, v) in ext_pools.items():
+        st = states.get(name)
+        assert (isinstance(st, dict) and "pt" in st
+                and st.get("k") is None), \
+            f"ext pool {name!r} does not name a paged cache"
+        assert k.shape[-4:] == (pool_pages, page_size,
+                                cfg.num_kv_heads, cfg.head_dim) \
+            and k.dtype == dtype, ("retained pool geometry mismatch",
+                                   name, k.shape)
+        st["k"], st["v"] = k, v
     states["length"] = jnp.zeros((batch,), jnp.int32)
     return states
 

@@ -82,8 +82,20 @@ compiles O(buckets) instead of O(distinct prompt/suffix lengths) under
 naturally varying traffic; ``install_traces`` in stats counts the
 distinct shapes actually traced.
 
-The per-cycle :meth:`ServingEngine.step` API owns ONE decode cycle, so the
-host loop can interleave submissions, refills, and stats collection.
+Cycle API (overlap contract): :meth:`ServingEngine.dispatch_cycle`
+launches one decode cycle and returns immediately (JAX async dispatch);
+:meth:`complete_cycle` blocks on its results, banks tokens, and retires —
+the ONLY host/device sync boundary. Between the two, the host owns the
+overlap window: :meth:`admit_idle` fills idle slots from the queue while
+the device decodes, collapsing same-length-bucket admission groups into
+single batched :func:`~repro.core.state.install_rows` dispatches; the
+install's anchor token is never read back inline (pending-anchor
+deferral, flushed at the next retire boundary). The synchronous
+:meth:`step` is dispatch + complete back-to-back; the async front-end
+(``serving/frontend.py``) drives the split form. Timestamps and
+per-request SLA events go through an injected
+:class:`~repro.serving.metrics.Clock` / ``MetricsRecorder``
+(``serving/metrics.py``), shared by both drivers.
 Aggregate stats track tokens actually committed per request
 (``min(filled, max_new)``), acceptance ``alpha`` over *active* row-cycles
 only and ``accepted`` draft tokens wired from the verify backends'
@@ -98,17 +110,17 @@ prefix-cache counters (``prefix_hits`` / ``prefix_misses`` /
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pipeline as pl
-from repro.core.state import (EngineState, adopt_pools, capture_pools,
-                              cow_copy_page, install_row, refill_copy_bytes)
+from repro.core.state import (EngineState, capture_pools, cow_copy_page,
+                              install_row, install_rows, refill_copy_bytes)
 from repro.models import kvcache as kvc
+from repro.serving.metrics import Clock, MetricsRecorder, MonotonicClock
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
 
 
@@ -141,6 +153,10 @@ class Wave:
     row_hits: Optional[List[Optional[PrefixHit]]] = None
     trunc: Optional[np.ndarray] = None  # [B] output buf overflowed (bool)
     evictions0: int = 0                 # cache.evictions at wave start
+    # slots whose install-produced anchor token has not been read back to
+    # bufs yet — materialized lazily at the next safe host-sync boundary
+    # (_flush_anchors), so an overlapped install never forces a device sync
+    pending_anchor: Set[int] = dataclasses.field(default_factory=set)
 
     @property
     def done(self) -> bool:
@@ -159,7 +175,9 @@ class ServingEngine:
                  page_size: int = 64, prefix_cache: bool = False,
                  bucket_sizes="auto", pool_scope: str = "engine",
                  pool_pages: Optional[int] = None,
-                 pool_headroom: float = 1.0):
+                 pool_headroom: float = 1.0,
+                 clock: Optional[Clock] = None,
+                 recorder: Optional[MetricsRecorder] = None):
         assert cache_impl in ("dense", "paged"), cache_impl
         assert pool_scope in ("engine", "wave"), pool_scope
         if pool_pages is not None and not (cache_impl == "paged"
@@ -211,6 +229,14 @@ class ServingEngine:
             bucket_sizes = DEFAULT_BUCKETS
         self.bucket_sizes = (tuple(sorted(bucket_sizes))
                              if bucket_sizes else None)
+        # every engine timestamp goes through the injected clock (the sync
+        # drain loop and the async front-end share one timing source, so
+        # their wall_s / SLA numbers are directly comparable); the engine
+        # also charges simulated work to it (tick "cycle" per dispatched
+        # decode cycle, "install" per install dispatch) — a no-op on the
+        # real MonotonicClock, deterministic cost on a VirtualClock
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.recorder = recorder
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
@@ -223,7 +249,7 @@ class ServingEngine:
                       "wall_s": 0.0, "waves": 0, "alpha": 0.0,
                       "wasted_row_cycles": 0, "refills": 0,
                       "refill_copy_bytes": 0, "installs": 0,
-                      "install_traces": 0,
+                      "install_traces": 0, "install_calls": 0,
                       "pool_pages": 0, "pool_peak_pages": 0,
                       "pool_utilization": 0.0,
                       "prefix_hits": 0, "prefix_misses": 0,
@@ -236,13 +262,18 @@ class ServingEngine:
         self._util_samples = 0
         self._install_shapes = set()
 
-    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+    def submit(self, prompt: np.ndarray, max_new: int,
+               t_arrival: Optional[float] = None) -> int:
         # Monotonic uid: len(queue)+len(done) would collide once a wave
         # drains the queue mid-run.
         uid = self._next_uid
         self._next_uid += 1
         self.queue.append(Request(uid, np.asarray(prompt, np.int32),
                                   max_new))
+        if self.recorder is not None:
+            # open-loop drivers pass the trace arrival time so TTFT counts
+            # from when the client sent the request, not from this call
+            self.recorder.on_arrival(uid, t=t_arrival)
         return uid
 
     def _next_wave(self) -> List[Request]:
@@ -295,8 +326,17 @@ class ServingEngine:
         return live + int(np.ceil(self.pool_headroom * live))
 
     # ------------------------------------------------------ step API ------
-    def start_wave(self) -> bool:
-        """Allocate + prefill the next running batch. False if queue empty."""
+    def start_wave(self, width: Optional[int] = None) -> bool:
+        """Allocate + prefill the next running batch. False if queue empty.
+
+        ``width`` (open-loop serving): build the wave with this many rows
+        even if fewer requests are visible right now — the extra rows
+        start idle (masked, sentinel page tables) and are filled later by
+        refills / :meth:`admit_idle`. Without it the wave is exactly as
+        wide as the initial batch, which is right for drain-loop replay
+        (everything submitted up front) but starves an open-loop server:
+        a wave started at the first arrival would be 1 row wide and
+        chain-refill would keep that single row busy forever."""
         assert self.wave is None, "finish the active wave first"
         g = self.bundle.spec.gamma
         if (self.cache_impl == "paged" and self.pool_scope == "engine"
@@ -321,7 +361,8 @@ class ServingEngine:
         reqs = self._next_wave()
         if not reqs:
             return False
-        b = len(reqs)
+        b = (len(reqs) if width is None
+             else min(self.batch_size, max(width, len(reqs))))
         # size caches for the wave plus the next batch of likely refill
         # candidates — not the whole queue, or one huge queued request
         # would inflate every slot's KV/feature allocation; requests that
@@ -350,23 +391,22 @@ class ServingEngine:
             pool_pages = pool.n_pages
             mp = min(need[0], pool_pages)
             row_pages = [[] for _ in range(b)]
-            # all rows start unallocated: table rows hold the out-of-range
+            # all rows start unallocated: table rows hold the growth-stable
             # sentinel until _install patches them
-            table = np.full((b, mp), pool_pages, np.int32)
+            table = np.full((b, mp), kvc.PAGE_SENTINEL, np.int32)
+            # borrowed-pool contract: retained device pool buffers (from
+            # capture_pools at the last turnover) go straight into init —
+            # pages the radix tree kept hold their KV across the turnover
+            # and the transient pool-sized zero allocation the old
+            # init-then-adopt_pools sequence paid is never materialized.
+            # Drop our reference: the wave's first donated install
+            # consumes the state.
             state = pl.engine_init(self.bundle, b, mp * self.page_size,
                                    cache_impl="paged",
                                    page_size=self.page_size,
-                                   pool_pages=pool_pages, page_table=table)
-            if self._pools is not None:
-                # borrowed-pool contract: re-install the engine pool's
-                # device buffers so pages the radix tree retained keep
-                # their KV across the turnover; drop our reference — the
-                # wave's first donated install consumes the state.
-                # (engine_init's fresh zero pools are discarded here: a
-                # transient pool-sized alloc per TURNOVER, not per cycle —
-                # plumbing retained buffers into init is a ROADMAP item)
-                state = adopt_pools(state, self._pools)
-                self._pools = None
+                                   pool_pages=pool_pages, page_table=table,
+                                   pools=self._pools)
+            self._pools = None
             # lifetime max, matching pool_peak_pages' scope — a small
             # leftover wave must not shrink the reported pool below the
             # peak measured in an earlier, larger wave
@@ -380,7 +420,8 @@ class ServingEngine:
                          bufs=np.zeros((b, cap), np.int32),
                          filled=np.zeros((b,), np.int64),
                          targets=np.zeros((b,), np.int64),
-                         t0=time.time(), pool=pool, row_pages=row_pages,
+                         t0=self.clock.now(), pool=pool,
+                         row_pages=row_pages,
                          cache=cache, row_tables=[None] * b,
                          row_hits=[None] * b, trunc=np.zeros((b,), bool),
                          evictions0=cache.evictions if cache else 0)
@@ -388,8 +429,9 @@ class ServingEngine:
         # A retire can chain-refill from beyond the pool-sizing candidate
         # window; interleaving it with the initial installs could hand those
         # refills pages the pool only guarantees for the initial set.
-        for i, r in enumerate(reqs):
-            self._install(i, r)
+        # Same-bucket initial installs collapse into batched install_rows
+        # calls (one dispatch + one batch-K prefill per length group).
+        self._install_group(list(enumerate(reqs)))
         for i in range(b):
             if (self.wave.requests[i] is not None
                     and self.wave.filled[i] >= self.wave.targets[i]):
@@ -485,24 +527,132 @@ class ServingEngine:
         # different batch / capacity / pool size retraces even for an
         # already-seen suffix length)
         self._install_shapes.add(
-            (len(suffix), hit is not None, w.state.batch, w.state.max_len,
+            (1, len(suffix), hit is not None, w.state.batch, w.state.max_len,
              w.pool.n_pages if w.pool is not None else 0))
         self.stats["install_traces"] = len(self._install_shapes)
         self.stats["refill_copy_bytes"] += refill_copy_bytes(w.state, s)
         self.stats["installs"] += 1
+        self.stats["install_calls"] += 1
+        if self.recorder is not None:
+            self.recorder.on_admit(r.uid)
         w.state = install_row(self.bundle, w.state, slot, suffix, key=sub,
                               temperature=self.bundle.spec.temperature,
                               row_table=row_table,
                               prefix_hit=prefix_len if hit else None,
                               true_len=true_len)
+        self.clock.tick("install")
+        self._book_install(slot, r)
+
+    def _book_install(self, slot: int, r: Request) -> None:
+        """Host bookkeeping shared by single and batched installs. The
+        anchor token (the request's FIRST generated token, produced by the
+        install's prefill) is NOT read back here — reading it would block
+        the host on the device stream and kill install/decode overlap.
+        The slot is marked pending and the anchor lands in ``bufs`` at the
+        next retire boundary (:meth:`_flush_anchors`)."""
+        w = self.wave
         w.bufs[slot] = 0
-        w.bufs[slot, 0] = int(np.asarray(w.state.anchor)[slot])
+        w.pending_anchor.add(slot)
         w.filled[slot] = 1
         w.targets[slot] = r.max_new
         w.requests[slot] = r
         w.trunc[slot] = False
-        r.t_start = time.time()
+        r.t_start = self.clock.now()
         r.n_cycles = 0
+        if self.recorder is not None:
+            # first token exists once the dispatched install completes —
+            # stamped here at dispatch, after charging the install tick
+            self.recorder.on_first_token(r.uid)
+
+    def _flush_anchors(self) -> None:
+        """Materialize pending install anchors into ``bufs``.
+
+        The single deferred host read of the overlap design: called before
+        a cycle dispatch consumes (donates) the state, and at retire
+        boundaries before banked outputs are assembled. One blocking
+        ``np.asarray`` covers every install since the last flush."""
+        w = self.wave
+        if w is None or not w.pending_anchor:
+            return
+        anchors = np.asarray(w.state.anchor)
+        for slot in w.pending_anchor:
+            w.bufs[slot, 0] = int(anchors[slot])
+        w.pending_anchor.clear()
+
+    def _install_group(self, picks: List[Tuple[int, Request]]) -> None:
+        """Install (slot, request) picks, collapsing same-length-bucket
+        groups into ONE batched :func:`install_rows` dispatch each.
+
+        The batched path requires greedy anchors (temperature 0: argmax is
+        key-independent, so one shared PRNG key is token-identical to
+        per-request keys) and no prefix cache (hits need per-row warm
+        starts / COW orchestration); otherwise every pick falls back to
+        the single-slot :meth:`_install`.
+        """
+        w = self.wave
+        if (self.bundle.spec.temperature > 0 or w.cache is not None
+                or len(picks) <= 1):
+            for slot, r in picks:
+                self._install(slot, r)
+            return
+        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        for slot, r in picks:
+            groups.setdefault(self._bucket(len(r.prompt)), []).append(
+                (slot, r))
+        for pad, grp in sorted(groups.items()):
+            if len(grp) == 1:
+                self._install(*grp[0])
+            else:
+                self._install_batch(grp, pad)
+
+    def _install_batch(self, grp: List[Tuple[int, Request]], pad: int
+                       ) -> None:
+        """One donated batch-K install for K same-bucket cold requests."""
+        w = self.wave
+        self.key, sub = jax.random.split(self.key)
+        g = self.bundle.spec.gamma
+        k = len(grp)
+        row_tables = None
+        if self.cache_impl == "paged":
+            tables = []
+            for slot, r in grp:
+                pages = w.pool.alloc(self._pages_needed(r, g))
+                assert pages is not None, \
+                    "admission control must guarantee pages"
+                w.row_pages[slot] = pages
+                w.row_tables[slot] = w.pool.row_table(pages,
+                                                      w.state.max_pages)
+                w.row_hits[slot] = None
+                tables.append(w.row_tables[slot])
+                if w.cache is not None:
+                    self.stats["prefix_misses"] += 1
+            row_tables = np.stack(tables)
+        prompts = np.zeros((k, pad), np.int32)
+        true = np.zeros((k,), np.int32)
+        for i, (slot, r) in enumerate(grp):
+            p = np.asarray(r.prompt, np.int32)
+            prompts[i, : len(p)] = p
+            true[i] = len(p)
+            self.stats["refill_copy_bytes"] += refill_copy_bytes(
+                w.state, len(p))
+            if self.recorder is not None:
+                self.recorder.on_admit(r.uid)
+        self._install_shapes.add(
+            (k, pad, False, w.state.batch, w.state.max_len,
+             w.pool.n_pages if w.pool is not None else 0))
+        self.stats["install_traces"] = len(self._install_shapes)
+        self.stats["installs"] += k
+        self.stats["install_calls"] += 1
+        true_len = true if self.bucket_sizes is not None else None
+        w.state = install_rows(self.bundle, w.state,
+                               np.array([s for s, _ in grp], np.int32),
+                               prompts, key=sub,
+                               temperature=self.bundle.spec.temperature,
+                               row_tables=row_tables, true_len=true_len)
+        # ONE dispatch for the whole group: one simulated install charge
+        self.clock.tick("install")
+        for slot, r in grp:
+            self._book_install(slot, r)
 
     # ---- sizing: single source of truth for allocation and admission ----
     @staticmethod
@@ -519,20 +669,22 @@ class ServingEngine:
     def _pages_needed(self, r: Request, g: int) -> int:
         return kvc.pages_for(self._cache_needed(r, g), self.page_size)
 
-    def _fits(self, r: Request) -> bool:
+    def _fits(self, r: Request, reserved_pages: int = 0) -> bool:
         """Can ``r`` be adopted into the current wave's allocation?
         Paged mode admits on free *pages*, not a per-slot max_len row;
         with the prefix cache on, LRU-evictable (unpinned) cached pages
         count as available — the check is deliberately for the MISS
         shape, so an install can always fall back to cold if the pool is
-        too tight to honor its hit."""
+        too tight to honor its hit. ``reserved_pages``: pages already
+        promised to co-admitted requests whose installs have not
+        allocated yet (admit_idle picks a group before installing it)."""
         w = self.wave
         g = self.bundle.spec.gamma
         if self._bufs_needed(r, g) > w.bufs.shape[1]:
             return False
         if self.cache_impl == "paged":
             n = self._pages_needed(r, g)
-            avail = w.pool.free_pages
+            avail = w.pool.free_pages - reserved_pages
             if w.cache is not None:
                 avail += w.cache.evictable_pages()
             return n <= w.state.max_pages and n <= avail
@@ -544,19 +696,21 @@ class ServingEngine:
         return np.array([r is not None and w.filled[i] < w.targets[i]
                          for i, r in enumerate(w.requests)])
 
-    def step(self) -> bool:
-        """Run ONE decode cycle for the running batch and bank its tokens.
+    def dispatch_cycle(self):
+        """Launch ONE decode cycle on device WITHOUT waiting for it.
 
-        Finished requests retire immediately and (with ``refill``) their
-        slot adopts the FIFO head of the queue via a per-slot prefill.
-        Returns True while any slot still has an unfinished request;
-        False once the wave has closed — including the case where
-        ``start_wave`` already finished it outright (a burst of
-        ``max_new <= 1`` requests satisfied by their prefills).
+        Returns an opaque handle for :meth:`complete_cycle` (None when no
+        wave is running). JAX async dispatch means the call returns as
+        soon as the cycle is enqueued; the host is then free to do
+        admission work — match queued prompts, allocate pages, dispatch
+        installs for idle slots (:meth:`admit_idle`) — while the device
+        decodes. Pending install anchors are flushed FIRST: the cycle
+        donates (invalidates) the state they live in.
         """
         w = self.wave
         if w is None:
-            return False
+            return None
+        self._flush_anchors()
         b = len(w.requests)
         active = self._host_active()
         # push the mask: with early_exit, finished/idle rows cost nothing
@@ -567,21 +721,39 @@ class ServingEngine:
             else jnp.ones((b,), bool))
         self.key, sub = jax.random.split(self.key)
         w.state, out = self._cycle(w.state, sub)
-        toks = np.asarray(out["tokens"])
-        n_out = np.asarray(out["n_out"])
-        cap = w.bufs.shape[1]
         w.cycles += 1
+        self.clock.tick("cycle")
         if w.pool is not None:
             self._util_sum += w.pool.pages_in_use / max(w.pool.n_pages, 1)
             self._util_samples += 1
         # stats: only rows that were actively serving a request count
         # toward acceptance; the rest are wasted batch capacity
         self.stats["wasted_row_cycles"] += int(b - active.sum())
+        return active, out
+
+    def complete_cycle(self, handle) -> bool:
+        """Block on a dispatched cycle's results, bank tokens, retire.
+
+        The ``np.asarray`` reads below are the wave's ONLY device-sync
+        boundary: everything dispatched since the handle was created (the
+        cycle itself plus any overlapped installs) completes before the
+        banked streams are touched. Returns True while any slot still has
+        an unfinished request; False once the wave has closed — including
+        the case where ``start_wave`` already finished it outright (a
+        burst of ``max_new <= 1`` requests satisfied by their prefills).
+        """
+        w = self.wave
+        if handle is None or w is None:
+            return False
+        active, out = handle
+        toks = np.asarray(out["tokens"])            # retire-boundary sync
+        n_out = np.asarray(out["n_out"])
+        cap = w.bufs.shape[1]
         self._alpha_num += int(n_out[active].sum())
         self._alpha_den += int(active.sum())
         # real accepted-draft counts straight from the verify backends
         self.stats["accepted"] += int(np.asarray(out["n_acc"])[active].sum())
-        for i in range(b):
+        for i in range(len(w.requests)):
             r = w.requests[i]
             if r is None:
                 continue
@@ -603,17 +775,76 @@ class ServingEngine:
             return False
         return True
 
+    def step(self) -> bool:
+        """Run ONE decode cycle synchronously (dispatch + complete
+        back-to-back) and bank its tokens. Finished requests retire
+        immediately and (with ``refill``) their slot adopts the FIFO head
+        of the queue via a per-slot prefill."""
+        return self.complete_cycle(self.dispatch_cycle())
+
+    def admit_idle(self) -> int:
+        """Mid-flight admission: fill IDLE slots from the queue while a
+        dispatched cycle is still decoding on device (the overlap window).
+
+        The synchronous engine refills only at the retire moment — a slot
+        that goes idle because the queue happened to be empty right then
+        stays idle until the wave ends. Called between
+        :meth:`dispatch_cycle` and :meth:`complete_cycle`, this admits
+        bursty arrivals that landed since: the host groups same-bucket
+        prompts, allocates their pages, and dispatches batched installs
+        (:func:`~repro.core.state.install_rows`) that the device executes
+        after the in-flight cycle — idle slots start producing one cycle
+        later instead of one WAVE later. Safe without a sync because an
+        idle slot is inactive in the running cycle (mask snapshot taken
+        at dispatch) and installs touch only that row + freshly allocated
+        pages. Returns the number of requests admitted.
+        """
+        w = self.wave
+        if w is None or not self.refill or not self.queue:
+            return 0
+        g = self.bundle.spec.gamma
+        picks: List[Tuple[int, Request]] = []
+        reserved = 0
+        for slot in range(len(w.requests)):
+            if w.requests[slot] is not None:
+                continue
+            if not self.queue or not self._fits(self.queue[0], reserved):
+                break
+            r = self.queue.pop(0)
+            picks.append((slot, r))
+            if self.cache_impl == "paged":
+                # reserve against concurrent picks: _fits sees the pool
+                # before these installs allocate their pages
+                reserved += self._pages_needed(r, g)
+        if not picks:
+            return 0
+        self._install_group(picks)
+        self.stats["refills"] += len(picks)
+        for slot, r in picks:
+            if w.requests[slot] is not None \
+                    and w.filled[slot] >= w.targets[slot]:
+                # satisfied by the prefill alone (max_new <= 1)
+                self._retire(slot)
+        return len(picks)
+
     def _retire(self, slot: int) -> None:
         w = self.wave
         while True:
+            # retire boundary: the banked stream (incl. any pending install
+            # anchor — a chain-refilled max_new<=1 request retires straight
+            # from its prefill) must be materialized before r.out is cut
+            self._flush_anchors()
             r = w.requests[slot]
             r.out = w.bufs[slot, : r.max_new].copy()
-            r.latency_s = time.time() - r.t_start
+            r.latency_s = self.clock.now() - r.t_start
             self.done.append(r)
             # count tokens actually committed: a cycle-cap bailout can
             # retire a request with filled < max_new, which must not
             # inflate tokens_per_s
-            self.stats["tokens"] += int(min(w.filled[slot], r.max_new))
+            committed = int(min(w.filled[slot], r.max_new))
+            self.stats["tokens"] += committed
+            if self.recorder is not None:
+                self.recorder.on_done(r.uid, committed)
             w.requests[slot] = None
             w.targets[slot] = 0
             if w.pool is not None:
@@ -655,7 +886,8 @@ class ServingEngine:
 
     def _finish_wave(self) -> None:
         w = self.wave
-        dt = time.time() - w.t0
+        self._flush_anchors()
+        dt = self.clock.now() - w.t0
         self.stats["cycles"] += w.cycles * len(w.requests)
         self.stats["wall_s"] += dt
         self.stats["waves"] += 1
@@ -681,6 +913,13 @@ class ServingEngine:
 
     # ----------------------------------------------------- drain loop -----
     def run(self) -> Dict:
+        """Synchronous drain loop (dispatch + complete back-to-back).
+
+        ``wall_s`` accumulates per-wave deltas of the injected
+        :class:`~repro.serving.metrics.Clock` — monotonic wall time by
+        default, deterministic simulated time under a ``VirtualClock`` —
+        the same timing source the async front-end uses, so sync and
+        overlapped numbers are directly comparable."""
         while self.queue or self.wave is not None:
             if self.wave is None and not self.start_wave():
                 break

@@ -96,7 +96,7 @@ def test_page_pool_alloc_free_invariants():
     with pytest.raises(AssertionError):
         pool.free([c[0], c[0]])             # double free is a bug
     t = pool.row_table(b, max_pages=5)
-    assert list(t[:2]) == b and (t[2:] == pool.n_pages).all()
+    assert list(t[:2]) == b and (t[2:] == kvc.PAGE_SENTINEL).all()
 
 
 # ----------------------------------------------------------- token parity --
