@@ -36,7 +36,8 @@ def main() -> None:
                 ("serving", lambda q: serving_bench.run(q)),
                 ("prefix", lambda q: serving_bench.run_prefix(q)),
                 ("resident", lambda q: serving_bench.run_resident(q)),
-                ("sla", lambda q: serving_bench.run_sla(q))]
+                ("sla", lambda q: serving_bench.run_sla(q)),
+                ("sharded", lambda q: serving_bench.run_sharded(q))]
 
     study_dir = Path(__file__).resolve().parents[1] / "experiments" / "study"
     if not args.skip_study:

@@ -37,6 +37,17 @@ asserted); per-request tokens are asserted identical cache-on vs
 cache-off vs legacy per-wave pools. Results land in the ``resident``
 section.
 
+``--suite sharded`` replays the resident burst schedule through ONE
+engine spanning a 4-way ``kv_seq`` host mesh (page payload bytes
+sharded within-page, page identity host-global, cascade verify under
+``shard_map``) vs the single-device engine: per-request tokens are
+asserted identical, cross-wave prefix hits must survive turnover
+through the sharded pool, and the ``sharded`` section reports the
+per-shard pool placement (``pool_shard_slots``, utilization) and the
+``decode_collective_bytes`` the verify LSE-psum moves. Re-execs itself
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` when the
+host exposes fewer than 4 devices.
+
 Needs no trained study artifacts — builds a tiny random bundle. The
 bundle uses a SMALL vocab (17): with random-init drafters the chance a
 draft token matches the target argmax scales as ~1/vocab, and the
@@ -446,6 +457,101 @@ def run_resident(quick: bool = False) -> None:
     })
 
 
+# ----------------------------------------------------------- sharded suite -
+def _run_sharded_inline(quick: bool) -> None:
+    import contextlib
+
+    from repro.distributed import sharding as sh
+    from repro.launch.mesh import make_mesh
+
+    gamma, k = (4, 2) if quick else (5, 2)
+    batch = 2
+    bundle = _tiny_bundle(gamma, k, vocab=VOCAB)
+    rounds = _resident_rounds(bundle, quick)
+
+    def leg(mesh):
+        ctx = (sh.use_sharding(mesh, dict(sh.LOGICAL_RULES, kv_seq="model"))
+               if mesh is not None else contextlib.nullcontext())
+        with ctx:
+            return _serve_resident(bundle, rounds, batch, prefix_cache=True)
+
+    marks_ref, ref, ref_out = leg(None)
+    marks_sh, shd, sh_out = leg(make_mesh(data=1, model=4))
+    tokens_equal = sh_out == ref_out
+    assert tokens_equal, \
+        "kv_seq sharding changed per-request output"
+    assert shd["kv_shards"] == 4, shd["kv_shards"]
+    # resident acceptance across the mesh: wave-N prefixes hit in wave N+1
+    cross_wave_hit_tokens = (shd["prefix_hit_tokens"]
+                             - marks_sh[0]["prefix_hit_tokens"])
+    assert cross_wave_hit_tokens > 0, \
+        "no prefix cached in wave N was hit in wave N+1 (sharded engine)"
+    assert shd["decode_collective_bytes"] > 0, shd
+
+    _row("sharded_single_device", ref)
+    _row("sharded_kv_seq_4way", shd)
+    print(csv_row(
+        "sharded_pool_placement", 0.0,
+        f"kv_shards={shd['kv_shards']} "
+        f"shard_slots={shd['pool_shard_slots']} "
+        f"pool_util={shd['pool_utilization']:.2f} "
+        f"decode_collective_bytes={shd['decode_collective_bytes']} "
+        f"cross_wave_hit_tokens={cross_wave_hit_tokens} "
+        f"tokens_equal={tokens_equal}"))
+
+    _merge_bench_json("sharded", {
+        "config": {"gamma": gamma, "k": k, "batch": batch,
+                   "n_rounds": len(rounds),
+                   "n_requests": sum(len(r) for r in rounds),
+                   "quick": quick, "page_size": PAGE_SIZE, "vocab": VOCAB,
+                   "mesh": {"data": 1, "model": 4, "kv_seq_axis": "model"}},
+        "single_device": dict(ref),
+        "sharded": dict(shd),
+        "per_round_sharded": marks_sh,
+        "tokens_equal": tokens_equal,
+        "cross_wave_hit_tokens": cross_wave_hit_tokens,
+        # per-shard pool view: page IDENTITY is global, so occupancy (and
+        # hence utilization) is identical on every shard — what differs
+        # is the per-shard footprint, pool_shard_slots KV slots per shard
+        "pool_shard_slots": shd["pool_shard_slots"],
+        "pool_shard_utilization": shd["pool_utilization"],
+        "decode_collective_bytes": shd["decode_collective_bytes"],
+    })
+
+
+def run_sharded(quick: bool = False) -> None:
+    """Sharded resident serving: the resident submit→drain burst schedule
+    replayed through ONE engine spanning a 4-way ``kv_seq`` host mesh vs
+    the single-device engine. Asserts per-request token identity, cross-
+    wave prefix hits through the sharded engine pool, and reports the
+    per-shard pool placement (``pool_shard_slots`` slots/shard, identical
+    per-shard utilization — page identity is global) plus the
+    ``decode_collective_bytes`` the verify LSE-psum moves per run.
+    Re-execs itself under ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=4`` when fewer than 4 devices are visible (the usual CPU case).
+    """
+    import jax
+    if jax.device_count() >= 4:
+        _run_sharded_inline(quick)
+        return
+    import os
+    import subprocess
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("JAX_PLATFORMS", None)
+    cmd = [sys.executable, "-m", "benchmarks.serving_bench", "--sharded"]
+    if quick:
+        cmd.append("--quick")
+    out = subprocess.run(cmd, env=env, cwd=str(root), capture_output=True,
+                         text=True, timeout=1800)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr[-3000:] + "\n")
+        raise RuntimeError("sharded serving bench subprocess failed")
+
+
 if __name__ == "__main__":
     if "--sla" in sys.argv:
         run_sla("--quick" in sys.argv)
@@ -453,5 +559,7 @@ if __name__ == "__main__":
         run_resident("--quick" in sys.argv)
     elif "--prefix" in sys.argv:
         run_prefix("--quick" in sys.argv)
+    elif "--sharded" in sys.argv:
+        run_sharded("--quick" in sys.argv)
     else:
         run("--quick" in sys.argv)

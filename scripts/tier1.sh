@@ -8,6 +8,12 @@
 #   scripts/tier1.sh --stress   # randomized pool/radix/COW invariant suite:
 #                               # the fixed tier-1 seed PLUS the reroll seeds
 #                               # (marked `slow`, see tests/test_pool_invariants.py)
+#   scripts/tier1.sh --mesh     # re-run the suite on an 8-device host mesh
+#                               # (XLA_FLAGS=--xla_force_host_platform_device_count=8,
+#                               # REPRO_MESH=1x4: every test wrapped in a
+#                               # use_sharding kv_seq context — the sharded
+#                               # resident-serving gate; combines with --fast:
+#                               # `scripts/tier1.sh --mesh --fast`)
 #   scripts/tier1.sh tests/test_paged.py   # extra args pass through
 #
 # Pallas kernels run in interpret mode on CPU (pytest marker `pallas`);
@@ -17,6 +23,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--mesh" ]]; then
+  shift
+  export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+  export REPRO_MESH="${REPRO_MESH:-1x4}"
+fi
 if [[ "${1:-}" == "--fast" ]]; then
   shift
   exec python -m pytest -x -q -m "not slow and not pallas" "$@"

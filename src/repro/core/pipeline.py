@@ -63,8 +63,14 @@ jax.tree_util.register_pytree_node(
 
 # -------------------------------------------------------------- the cycle --
 def decode_cycle(bundle: SpecBundle, state: EngineState, key,
-                 collect_stats: bool = True):
+                 collect_stats: bool = True, shard_tag=None):
     """One full speculative decoding cycle.
+
+    ``shard_tag`` (static, ``sharding.mesh_tag()``): cache-splitter only —
+    under an active mesh the trace differs (sharding constraints + the
+    shard_map cascade-verify hook in ``models/blocks.py``), which jit's
+    aval-keyed cache cannot see; the serving engine passes its captured
+    tag so sharded and single-device engines coexist in one process.
 
     Rows with ``state.active == False`` are masked end to end: their draft
     tree degenerates to the root, the verifier commits zero tokens (no KV
@@ -130,7 +136,7 @@ def decode_cycle(bundle: SpecBundle, state: EngineState, key,
 # generate() calls with the same shapes hit the trace cache instead of
 # re-tracing a fresh closure per call.
 _cycle_jit = functools.partial(
-    jax.jit, static_argnames=("collect_stats",))(decode_cycle)
+    jax.jit, static_argnames=("collect_stats", "shard_tag"))(decode_cycle)
 
 
 def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
@@ -166,8 +172,11 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
                     temperature=bundle.spec.temperature)
     first = np.asarray(state.anchor)
 
+    from repro.distributed import sharding as sh_lib
+
     def cycle(s, k):
-        return _cycle_jit(bundle, s, k, collect_stats=collect_stats)
+        return _cycle_jit(bundle, s, k, collect_stats=collect_stats,
+                          shard_tag=sh_lib.mesh_tag())
 
     out_buf = np.zeros((b, max_new + g + 1), np.int32)
     out_buf[:, 0] = first
@@ -214,10 +223,11 @@ def generate(bundle: SpecBundle, prompts, max_new: int, key=None, ctx=None,
 
 @functools.partial(jax.jit,
                    static_argnames=("max_new", "max_len", "early_exit",
-                                    "cache_impl", "page_size"))
+                                    "cache_impl", "page_size", "shard_tag"))
 def _ondevice_loop(bundle: SpecBundle, prompts, key, max_new: int,
                    max_len: int, early_exit: bool = True,
-                   cache_impl: str = "dense", page_size: int = 64):
+                   cache_impl: str = "dense", page_size: int = 64,
+                   shard_tag=None):
     """Prefill + full decode loop inside one ``lax.while_loop``.
 
     With ``early_exit`` the per-example ``EngineState.active`` mask is
@@ -291,11 +301,13 @@ def generate_ondevice(bundle: SpecBundle, prompts, max_new: int, key=None,
     g = bundle.spec.gamma
     key = key if key is not None else jax.random.PRNGKey(0)
     max_len = max_len or (p + max_new + 2 * g + 8)
+    from repro.distributed import sharding as sh_lib
     buf, n_cycles, total, act = _ondevice_loop(bundle, prompts, key,
                                                max_new, max_len,
                                                early_exit=early_exit,
                                                cache_impl=cache_impl,
-                                               page_size=page_size)
+                                               page_size=page_size,
+                                               shard_tag=sh_lib.mesh_tag())
     n = int(n_cycles)
     act = int(act)
     alpha = float(total) / act if act else 0.0

@@ -362,12 +362,14 @@ def row_template(state: EngineState, row_table) -> EngineState:
 
 
 def _with_lengths(sub: EngineState, length) -> EngineState:
-    """Batch-1 state with every committed-length leaf set to ``length``
-    (warm install: the spliced shared pages already hold that prefix)."""
-    l1 = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (1,))
-    return sub.replace(target={**sub.target, "length": l1},
-                       d1_feat={**sub.d1_feat, "length": l1},
-                       d2_feat={**sub.d2_feat, "length": l1})
+    """Batch-K state with every committed-length leaf set to ``length``
+    ([K] vector or scalar — warm install: the spliced shared pages
+    already hold that many committed positions per row)."""
+    k = sub.anchor.shape[0]
+    lk = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (k,))
+    return sub.replace(target={**sub.target, "length": lk},
+                       d1_feat={**sub.d1_feat, "length": lk},
+                       d2_feat={**sub.d2_feat, "length": lk})
 
 
 def _map_paged_pools(state: EngineState, fn) -> EngineState:
@@ -395,6 +397,14 @@ def capture_pools(state: EngineState) -> Dict[str, Any]:
     :func:`adopt_pools`, keeping every page the radix prefix cache owns
     bit-intact (cached prefixes survive ``start_wave``). Keys name the
     cache ("target/<entry>", "d1_feat", "d2_feat"); values are ``(k, v)``.
+
+    Per-shard contract (mesh residency): the captured values are the
+    device buffers THEMSELVES, placement included — on a mesh each
+    buffer's payload is laid out along the ``kv_seq`` axis
+    (:func:`~repro.models.kvcache.shard_pool`), and carrying the buffer
+    across the turnover carries that per-shard layout with it, zero-copy
+    (no gather to host, no resharding). Pool geometry stays the GLOBAL
+    logical shape throughout; only the bytes are distributed.
     """
     pools: Dict[str, Any] = {}
     for name, v in state.target.items():
@@ -416,6 +426,14 @@ def adopt_pools(state: EngineState, pools: Dict[str, Any]) -> EngineState:
     allocation; batch size and table width may differ freely. The caller
     must drop its own reference after the wave's first donated install
     consumes the state (the engine re-captures at wave turnover).
+
+    Shapes are compared against the GLOBAL logical geometry: a borrowed
+    buffer whose payload is sharded along ``kv_seq`` still reports its
+    global shape, so the adoption check (and the zero-copy pass-through —
+    the adopted array is installed as-is, never re-``device_put``) is
+    layout-agnostic. Do not mix buffers captured under one mesh into an
+    engine built under another; the engine's construction-time context is
+    the single source of placement truth.
     """
     def blk(d, path):
         if not kvc.is_paged(d) or path not in pools:
@@ -453,7 +471,12 @@ def cow_copy_page(state: EngineState, src, dst) -> EngineState:
 
 def _install_impl(bundle, state, row, prompt, key, row_table,
                   temperature: float, ctx_len: int, prefix_hit=None,
-                  true_len=None):
+                  true_len=None, shard_tag=None):
+    # shard_tag: static cache-splitter only (sharding.mesh_tag()) — the
+    # trace reads the ambient mesh context (constrain / shard_map hooks),
+    # which jit's aval-keyed cache cannot see; threading the tag lets one
+    # process hold sharded and unsharded specializations side by side.
+    del shard_tag
     if state.cache_impl == "paged":
         sub = row_template(state, row_table)
     else:
@@ -471,14 +494,14 @@ def _install_impl(bundle, state, row, prompt, key, row_table,
 # (prompt-bucket length, warm/cold, state shapes); `row`, `row_table`,
 # `prefix_hit` and `true_len` are traced.
 _install_row_donated = functools.partial(
-    jax.jit, static_argnames=("temperature", "ctx_len"),
+    jax.jit, static_argnames=("temperature", "ctx_len", "shard_tag"),
     donate_argnames=("state",))(_install_impl)
 
 
 def install_row(bundle, state: EngineState, row, prompt, key=None,
                 temperature: float = 0.0, row_table=None,
                 ctx_len: int = 0, prefix_hit=None,
-                true_len=None) -> EngineState:
+                true_len=None, shard_tag=None) -> EngineState:
     """Serving fast path: prefill ``prompt`` into ``row`` with the input
     ``state`` DONATED (caller must drop its reference). Paged states
     require ``row_table`` (the allocated pages); dense states splice via
@@ -507,18 +530,26 @@ def install_row(bundle, state: EngineState, row, prompt, key=None,
     return _install_row_donated(bundle, state, jnp.asarray(row, jnp.int32),
                                 prompt, key, row_table,
                                 temperature=temperature, ctx_len=ctx_len,
-                                prefix_hit=prefix_hit, true_len=true_len)
+                                prefix_hit=prefix_hit, true_len=true_len,
+                                shard_tag=shard_tag)
 
 
 def _install_rows_impl(bundle, state, rows, prompts, key, row_tables,
-                       temperature: float, ctx_len: int, true_len=None):
+                       temperature: float, ctx_len: int, true_len=None,
+                       prefix_hits=None, shard_tag=None):
+    del shard_tag                       # static cache-splitter (see above)
     k = prompts.shape[0]
     if state.cache_impl == "paged":
         sub = rows_template(state, row_tables)
     else:
         sub = engine_init(bundle, k, state.max_len, ctx_len=ctx_len)
+    if prefix_hits is not None:
+        # warm batch: every row's shared pages are already spliced into
+        # its table row (and COW-copied where needed) by the host; the
+        # per-row start vector offsets each suffix independently
+        sub = _with_lengths(sub, prefix_hits)
     sub = prefill(bundle, sub, prompts, key=key, temperature=temperature,
-                  true_len=true_len)
+                  true_len=true_len, start=prefix_hits)
     # K static adopts: paged pools pass through wholesale (every row's
     # prefill writes already landed in the shared pools), so each adopt
     # is one page-table row patch + small dense-leaf splices
@@ -527,16 +558,18 @@ def _install_rows_impl(bundle, state, rows, prompts, key, row_tables,
     return state
 
 
-# Donated batched install: one trace per (K, prompt-bucket length, state
-# shapes); `rows` and `row_tables` are traced.
+# Donated batched install: one trace per (K, prompt-bucket length,
+# warm/cold, state shapes); `rows`, `row_tables`, `true_len` and
+# `prefix_hits` are traced.
 _install_rows_donated = functools.partial(
-    jax.jit, static_argnames=("temperature", "ctx_len"),
+    jax.jit, static_argnames=("temperature", "ctx_len", "shard_tag"),
     donate_argnames=("state",))(_install_rows_impl)
 
 
 def install_rows(bundle, state: EngineState, rows, prompts, key=None,
                  temperature: float = 0.0, row_tables=None,
-                 ctx_len: int = 0, true_len=None) -> EngineState:
+                 ctx_len: int = 0, true_len=None, prefix_hits=None,
+                 shard_tag=None) -> EngineState:
     """Batched serving install: prefill K same-length prompts into K rows
     under ONE donated jit call — the multi-slot analogue of
     :func:`install_row`, collapsing K per-request installs (K dispatches,
@@ -544,29 +577,42 @@ def install_rows(bundle, state: EngineState, rows, prompts, key=None,
     splices. The async front-end uses it to drain same-length-bucket
     admission groups during the overlap window.
 
-    rows:       [K] slot indices (traced).
-    prompts:    [K, P] int32, all padded to one bucket length.
-    row_tables: [K, max_pages] allocated pages per request (paged only).
-    true_len:   [K] real prompt lengths under bucket padding.
+    rows:        [K] slot indices (traced).
+    prompts:     [K, P] int32, all padded to one bucket length.
+    row_tables:  [K, max_pages] allocated pages per request (paged only).
+    true_len:    [K] real prompt lengths under bucket padding.
+    prefix_hits: [K] warm-start lengths (paged only): row i's table
+        already holds ``prefix_hits[i]`` committed tokens of shared
+        prefix-cache pages — ``prompts[i]`` is only its (bucket-padded)
+        uncached suffix and ``true_len[i]`` the suffix's real length. The
+        host does all per-row COW orchestration BEFORE this call (the
+        spliced tables must be write-safe); mixed hit/miss groups are not
+        allowed — route misses through the cold path (``prefix_hits``
+        absent) so every row shares one warm/cold trace.
 
     Semantics note: sampling (temperature > 0) draws the K anchors from
-    one shared key — not bitwise-identical to K per-request keys — and
-    prefix-cache warm starts need per-row COW orchestration, so the
-    engine only routes temperature-0, cold installs here (greedy anchors
-    are key-independent, making the batched path token-identical to K
-    single installs; asserted by tests/test_frontend.py).
+    one shared key — not bitwise-identical to K per-request keys — so the
+    engine only routes temperature-0 installs here (greedy anchors are
+    key-independent, making the batched path token-identical to K single
+    installs — warm and cold; asserted by tests/test_frontend.py).
     """
     prompts = jnp.asarray(prompts, jnp.int32)
     rows = jnp.asarray(rows, jnp.int32)
     if state.cache_impl == "paged":
         assert row_tables is not None, "paged install needs allocated pages"
         row_tables = jnp.asarray(row_tables, jnp.int32)
+    else:
+        assert prefix_hits is None, "prefix-cache hits require paged KV"
     key = key if key is not None else jax.random.PRNGKey(0)
     if true_len is not None:
         true_len = jnp.asarray(true_len, jnp.int32)
+    if prefix_hits is not None:
+        prefix_hits = jnp.asarray(prefix_hits, jnp.int32)
     return _install_rows_donated(bundle, state, rows, prompts, key,
                                  row_tables, temperature=temperature,
-                                 ctx_len=ctx_len, true_len=true_len)
+                                 ctx_len=ctx_len, true_len=true_len,
+                                 prefix_hits=prefix_hits,
+                                 shard_tag=shard_tag)
 
 
 def prefill_row(bundle, state: EngineState, row, prompt, key=None, ctx=None,

@@ -145,7 +145,18 @@ class VerifyOutcome:
 
 
 class VerifierBackend:
-    """Protocol: run the target over a tree and commit the accepted path."""
+    """Protocol: run the target over a tree and commit the accepted path.
+
+    Backends are mesh-transparent: under a ``use_sharding`` context with
+    a ``kv_seq`` rule, the target forward they invoke routes paged
+    decode attention through the ``shard_map`` cascade-verify hook
+    (``models/blocks.py`` →
+    :func:`~repro.distributed.spdecode.sharded_paged_cache_attend` —
+    tree/block KV replicated, per-shard cache stats merged by a float32
+    LSE psum), while accept/commit logic here sees only global-shaped
+    arrays. Callers jitting a backend must thread
+    ``sharding.mesh_tag()`` as a static arg (see ``core/pipeline.py``)
+    so sharded and unsharded traces don't collide."""
 
     name: str = "?"
 

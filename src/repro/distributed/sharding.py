@@ -141,6 +141,43 @@ def constrain(x, logical: Sequence[Optional[str]]):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def mesh_tag():
+    """Hashable fingerprint of the active (mesh, rules, fsdp) context.
+
+    jit caches key on avals, not on this module's threadlocal context; any
+    jitted function whose TRACE depends on the active mesh (``constrain``
+    calls, the shard_map decode hooks) must take this as a static argument
+    so one process can hold sharded and unsharded specializations side by
+    side — the sharded-vs-single-device parity tests do exactly that.
+    Returns None outside a mesh context.
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    rules = tuple(sorted(
+        (k, tuple(v) if isinstance(v, (tuple, list)) else v)
+        for k, v in _CTX.rules.items()))
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape), rules,
+            _CTX.fsdp)
+
+
+def shard_put(x, logical: Sequence[Optional[str]]):
+    """``constrain`` that also works on concrete arrays (eager placement).
+
+    Inside a trace this is ``with_sharding_constraint``; on a concrete
+    array it is a ``device_put`` onto the fitted NamedSharding — the eager
+    half of the borrowed-pool contract (``ServingEngine`` allocates its
+    engine-lifetime pool outside any trace). No-op without a mesh.
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    if isinstance(x, jax.core.Tracer):
+        return constrain(x, logical)
+    spec = fit_spec(logical_to_pspec(logical, mesh), x.shape, mesh)
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
 # ---------------------------------------------------------------------------
 # Parameter sharding by path name.
 #

@@ -39,6 +39,23 @@ def kv_seq_axis() -> Optional[str]:
     return ax
 
 
+def kv_seq_shards() -> int:
+    """Size of the kv_seq mesh axis (1 without a mesh / unsharded)."""
+    mesh = sh.active_mesh()
+    axis = kv_seq_axis()
+    if mesh is None or axis is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+
+# Trace-time log of per-shard LSE-merge collective payload bytes: one entry
+# per ``sharded_paged_cache_attend`` call traced (shape-only, so it is
+# stable across executions of the same trace). The serving engine snapshots
+# this around its first cycle dispatch to attribute decode-collective bytes
+# per cycle; see ``ServingEngine.dispatch_cycle``.
+PAYLOAD_TRACE: list = []
+
+
 def sharded_cache_attend(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
                          q_abs, window, attn_softcap, blk_mask, rolling,
                          kv_chunk: int = 1024, merge_dtype=jnp.bfloat16):
@@ -93,15 +110,7 @@ def sharded_cache_attend(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
                                  clen=cl, qab=qab, window=window,
                                  attn_softcap=attn_softcap, rolling=rolling,
                                  kv_chunk=kv_chunk, vary_axes=vary_cache)
-        # ---- global LSE merge across the kv_seq axis ----
-        # normalize partials by the global max first so the psum payload can
-        # travel in bf16 without range loss (values in [0, l_local])
-        m_g = jax.lax.pmax(m, axis)
-        corr = jnp.exp(m - m_g)
-        l_g = jax.lax.psum((l * corr).astype(merge_dtype),
-                           axis).astype(jnp.float32)
-        acc_g = jax.lax.psum((acc * corr[..., None]).astype(merge_dtype),
-                             axis).astype(jnp.float32)
+        acc_g, m_g, l_g = _axis_lse_merge(acc, m, l, axis, merge_dtype)
         # ---- replicated block part (computed identically per shard) ----
         acc_b, m_b, l_b = attend_chunked(
             qs, bk, bv, causal=False, q_offset=0, extra_mask=bm,
@@ -123,13 +132,131 @@ def sharded_cache_attend(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
     )(q, cache_k, cache_v, blk_k, blk_v, clen, qa, blk_mask)
 
 
+def _axis_lse_merge(acc, m, l, axis, merge_dtype):
+    """LSE-merge flash partials across a mesh axis (pmax + 2 psums).
+
+    Partials are normalized by the global max first so the psum payload can
+    travel in bf16 without range loss (values in [0, l_local]); pass
+    ``merge_dtype=float32`` for exact merging (the serving engine's
+    default — token identity with the single-device engine requires argmax
+    stability, not just rtol-closeness).
+    """
+    m_g = jax.lax.pmax(m, axis)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum((l * corr).astype(merge_dtype),
+                       axis).astype(jnp.float32)
+    acc_g = jax.lax.psum((acc * corr[..., None]).astype(merge_dtype),
+                         axis).astype(jnp.float32)
+    return acc_g, m_g, l_g
+
+
+def sharded_paged_cache_attend(q, pool_k, pool_v, table, blk_k, blk_v, *,
+                               cache_len, q_abs, attn_softcap, blk_mask,
+                               page_size: int, kv_chunk: int = 1024,
+                               merge_dtype=jnp.float32):
+    """Paged cascade-verify attention under shard_map: single-softmax over
+    [paged cache ++ replicated block] with the pool's page *payloads*
+    sharded along the kv_seq axis.
+
+    Layout ("page identity is global, page bytes are per-shard"): the pool
+    is sharded on its within-page position axis — shard i of P holds slots
+    ``[i*page_loc, (i+1)*page_loc)`` of EVERY page, ``page_loc =
+    page_size // P``. Page tables stay host-global integer ids, so one
+    replicated gather per shard resolves its local view and no cross-shard
+    page traffic exists; the absolute position of local flat slot t is
+    ``(t // page_loc)*page_size + i*page_loc + (t % page_loc)``. Shards'
+    flash partials merge with the same LSE psum as the dense path; the
+    in-flight tree/block KV is replicated and merged locally.
+
+    q: [B,Tq,Hq,Dh] replicated; pool_k/v: [P_pages, page, Hkv, Dh]
+    logically (within-page axis sharded over kv_seq); table: [B, MP] int32
+    page ids (PAGE_SENTINEL rows masked out by ``cache_len``);
+    blk_k/v: [B,Tblk,Hkv,Dh]; cache_len [B]; q_abs [B,Tq] or [Tq].
+
+    Non-rolling global-attention layers only (the prefix cache's gating);
+    ``merge_dtype`` defaults to float32 — see :func:`_axis_lse_merge`.
+    """
+    from repro.models import kvcache as kvc
+
+    mesh = sh.active_mesh()
+    axis = kv_seq_axis()
+    assert mesh is not None and axis is not None
+    nsh = kv_seq_shards()
+    assert page_size % nsh == 0, (page_size, nsh)
+    page_loc = page_size // nsh
+    b, tq, hq, dh = q.shape
+    hkv = pool_k.shape[-2]
+    mp = table.shape[1]
+    if blk_mask is not None and blk_mask.ndim == 2:
+        blk_mask = jnp.broadcast_to(blk_mask[None],
+                                    (b, tq, blk_mask.shape[-1]))
+    clen = jnp.asarray(cache_len)
+    if clen.ndim == 0:
+        clen = jnp.full((b,), clen)
+    qa = jnp.asarray(q_abs)
+    if qa.ndim == 1:
+        qa = jnp.broadcast_to(qa[None], (b, tq))
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = []
+    prod = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and b % (prod * sizes[a]) == 0:
+            batch_axes.append(a)
+            prod *= sizes[a]
+    bspec = tuple(batch_axes) if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None)
+    vary_cache = tuple(batch_axes) + (axis,)
+    vary_blk = tuple(batch_axes)
+
+    # per-shard collective payload: acc+l in merge_dtype, m via fp32 pmax
+    md = jnp.dtype(merge_dtype).itemsize
+    PAYLOAD_TRACE.append(int(b * hkv * (hq // hkv) * tq * ((dh + 1) * md + 4)))
+
+    def shard_fn(qs, pk, pv, tbl, bk, bv, cl, qab, bm):
+        ax_idx = jax.lax.axis_index(axis)
+        # local logical view: [B, MP*page_loc, Hkv, Dh] — every page's
+        # local slot run, in page-table order
+        vk = kvc.pool_view(pk, tbl)
+        vv = kvc.pool_view(pv, tbl)
+        t = jnp.arange(mp * page_loc)
+        pos = ((t // page_loc) * page_size + ax_idx * page_loc
+               + (t % page_loc))[None, None, :]
+        acc, m, l = _cache_stats(
+            compat.pvary(qs, (axis,)), vk, vv, offset=0, cap=mp * page_size,
+            clen=cl, qab=qab, window=None, attn_softcap=attn_softcap,
+            rolling=False, kv_chunk=kv_chunk, vary_axes=vary_cache, pos=pos)
+        acc_g, m_g, l_g = _axis_lse_merge(acc, m, l, axis, merge_dtype)
+        acc_b, m_b, l_b = attend_chunked(
+            qs, bk, bv, causal=False, q_offset=0, extra_mask=bm,
+            attn_softcap=attn_softcap, kv_chunk=max(bk.shape[1], 8),
+            return_stats=True, vary_axes=vary_blk)
+        return merge_attn_stats([(acc_g, m_g, l_g), (acc_b, m_b, l_b)],
+                                qs.shape, qs.dtype)
+
+    return compat.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(bspec), P(None, axis), P(None, axis), P(bspec),
+                  P(bspec), P(bspec), P(bspec), P(bspec), P(bspec)),
+        out_specs=P(bspec),
+        check_vma=True,
+    )(q, pool_k, pool_v, table, blk_k, blk_v, clen, qa, blk_mask)
+
+
 def _cache_stats(q, k, v, *, offset, cap, clen, qab, window, attn_softcap,
-                 rolling, kv_chunk, vary_axes=()):
+                 rolling, kv_chunk, vary_axes=(), pos=None):
     """Flash partials over a local cache slice with absolute-position masks.
+
+    ``pos``: optional precomputed absolute key positions [1,1,S_loc] (the
+    paged layout's positions are non-contiguous per shard); defaults to the
+    contiguous ``offset + arange`` of a sequence-sliced dense cache.
     """
     b, tq = q.shape[:2]
     s_loc = k.shape[1]
-    jc = offset + jnp.arange(s_loc)[None, None, :]          # global slot ids
+    if pos is None:
+        jc = offset + jnp.arange(s_loc)[None, None, :]      # global slot ids
+    else:
+        jc = pos
     qpos = qab[:, :, None]
     cl = clen[:, None, None]
     if rolling:

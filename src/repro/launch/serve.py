@@ -7,6 +7,7 @@ acceptance + throughput statistics.
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import jax
 import numpy as np
@@ -15,6 +16,27 @@ from repro.config.base import SpecConfig
 from repro.core import pipeline as pl
 from repro.data.synthetic import SyntheticDataset
 from repro.serving.engine import ServingEngine
+
+
+def _mesh_context(args, ap):
+    """``use_sharding`` context for --mesh-data/--mesh-model (nullcontext
+    for the default 1x1). The engine captures the context at CONSTRUCTION
+    and re-enters it around every device-facing call, so only the
+    ``ServingEngine(...)`` call needs to run inside it."""
+    if args.mesh_data * args.mesh_model <= 1:
+        return contextlib.nullcontext()
+    need = args.mesh_data * args.mesh_model
+    if jax.device_count() < need:
+        ap.error(
+            f"--mesh-data x --mesh-model needs {need} devices but only "
+            f"{jax.device_count()} are visible; on CPU export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}")
+    from repro.distributed.sharding import LOGICAL_RULES, use_sharding
+    from repro.launch.mesh import make_mesh
+    rules = dict(LOGICAL_RULES)
+    rules["kv_seq"] = (None if args.kv_seq_axis == "off"
+                       else args.kv_seq_axis)
+    return use_sharding(make_mesh(args.mesh_data, args.mesh_model), rules)
 
 
 def main():
@@ -84,6 +106,27 @@ def main():
                     help="replay in deterministic simulated time (1 s per "
                          "decode cycle) instead of wall time "
                          "(with --traffic)")
+    ap.add_argument("--mesh-data", type=int, default=1,
+                    help="data mesh axis size: ONE resident engine spans "
+                         "the (data, model) mesh; batch rows shard over "
+                         "this axis when divisible (default 1)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model mesh axis size; with --cache-impl paged "
+                         "the page pool's payload bytes shard along it "
+                         "(the kv_seq logical axis: page_size must be "
+                         "divisible by this) and the cascade verify runs "
+                         "under shard_map with an LSE-psum merge — token-"
+                         "identical to --mesh-model 1. Needs data*model "
+                         "devices; on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N "
+                         "(default 1 = no mesh)")
+    ap.add_argument("--kv-seq-axis", default="model",
+                    choices=["model", "data", "off"],
+                    help="mesh axis backing the kv_seq logical axis (KV "
+                         "page payload placement + decode verify "
+                         "sharding); 'off' replicates the KV pool while "
+                         "keeping the rest of the mesh rules "
+                         "(default: model)")
     args = ap.parse_args()
 
     if args.random:
@@ -139,14 +182,15 @@ def main():
             per = max(-(-(a.prompt_len + a.max_new + 2 * g + 8)
                         // args.page_size) for a in trace)
             pool_pages = 2 * args.requests * per
-        eng = ServingEngine(bundle, batch_size=args.requests,
-                            cache_impl=args.cache_impl,
-                            page_size=args.page_size,
-                            prefix_cache=args.prefix_cache,
-                            pool_scope=args.pool_scope,
-                            pool_pages=pool_pages,
-                            pool_headroom=args.pool_headroom,
-                            clock=clock, recorder=rec, **kw)
+        with _mesh_context(args, ap):
+            eng = ServingEngine(bundle, batch_size=args.requests,
+                                cache_impl=args.cache_impl,
+                                page_size=args.page_size,
+                                prefix_cache=args.prefix_cache,
+                                pool_scope=args.pool_scope,
+                                pool_pages=pool_pages,
+                                pool_headroom=args.pool_headroom,
+                                clock=clock, recorder=rec, **kw)
         stats = ReplayDriver(eng, trace,
                              overlap=not args.sync_baseline).run()
         sla = stats["sla"]
@@ -163,13 +207,14 @@ def main():
               f"queue max={sla['queue_depth']['max']}")
         return
 
-    eng = ServingEngine(bundle, batch_size=args.requests,
-                        cache_impl=args.cache_impl,
-                        page_size=args.page_size,
-                        prefix_cache=args.prefix_cache,
-                        pool_scope=args.pool_scope,
-                        pool_pages=args.pool_pages,
-                        pool_headroom=args.pool_headroom, **kw)
+    with _mesh_context(args, ap):
+        eng = ServingEngine(bundle, batch_size=args.requests,
+                            cache_impl=args.cache_impl,
+                            page_size=args.page_size,
+                            prefix_cache=args.prefix_cache,
+                            pool_scope=args.pool_scope,
+                            pool_pages=args.pool_pages,
+                            pool_headroom=args.pool_headroom, **kw)
     ds = SyntheticDataset(args.task, 1, 64, seed=11)
     for p in ds.prompts(args.requests, 32, offset=10 ** 7):
         eng.submit(p, max_new=args.max_new)
@@ -179,10 +224,14 @@ def main():
         prefix = (f" | prefix_hits={stats['prefix_hits']} "
                   f"saved={stats['prefill_tokens_saved']}tok "
                   f"cow={stats['cow_copies']}")
+    mesh_note = ""
+    if stats.get("kv_shards", 1) > 1:
+        mesh_note = (f" | kv_shards={stats['kv_shards']} "
+                     f"shard_slots={stats['pool_shard_slots']}")
     print(f"mode={args.mode} served {len(eng.done)} requests | "
           f"alpha={stats.get('alpha', 0):.2f} | "
           f"{stats['tokens_per_s']:.1f} tok/s (CPU) | "
-          f"{stats['cycles']} cycles" + prefix)
+          f"{stats['cycles']} cycles" + prefix + mesh_note)
 
 
 if __name__ == "__main__":

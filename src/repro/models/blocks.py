@@ -280,6 +280,25 @@ def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
                             cache_len=cache_len, q_abs=q_abs, window=window,
                             attn_softcap=cfg.attn_softcap, blk_mask=blk_mask,
                             rolling=rolling, kv_chunk=kv_chunk)
+                elif axis is not None and paged and not rolling \
+                        and window is None:
+                    # paged cascade verify under shard_map: page payloads
+                    # sharded on the within-page axis, page ids global —
+                    # each shard gathers its slice of every table page and
+                    # partials merge via the LSE psum (fp32: token
+                    # identity with the single-device engine)
+                    page_size = state["k"].shape[-3]
+                    if page_size % spdecode.kv_seq_shards() == 0:
+                        blk_mask = extra_mask
+                        if blk_mask is None:
+                            tb = k.shape[1]
+                            blk_mask = jnp.tril(jnp.ones((tb, tb), bool))
+                        y = spdecode.sharded_paged_cache_attend(
+                            q, state["k"].astype(k.dtype),
+                            state["v"].astype(v.dtype), state["pt"], k, v,
+                            cache_len=cache_len, q_abs=q_abs,
+                            attn_softcap=cfg.attn_softcap, blk_mask=blk_mask,
+                            page_size=page_size, kv_chunk=kv_chunk)
                 if y is None:
                     ck, cv = cache_view()
                     kk = jnp.concatenate([ck, k], axis=1)

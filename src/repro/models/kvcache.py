@@ -65,6 +65,26 @@ prefix cache retain committed prefixes across wave turnover — a resident
 server stops re-prefilling its system prompts every wave. The legacy
 per-wave pool (``pool_scope="wave"``) allocates and drops a fresh pool
 per wave and is kept as the A/B reference.
+
+Mesh layout (page identity global, page bytes per-shard)
+--------------------------------------------------------
+Under a ``use_sharding`` context with a ``kv_seq`` rule, pool payloads
+are placed along that mesh axis by :func:`shard_pool` (called from
+:func:`init_pool`): the split is WITHIN the page's slot axis — shard
+``i`` of ``n`` owns slots ``[i*page_size/n, (i+1)*page_size/n)`` of
+EVERY page — so one host-side allocation decision places a page on all
+shards at once and nothing above this layer changes: :class:`PagePool`,
+refcounts, the radix tree and the page tables keep counting GLOBAL
+pages, arrays keep their global logical shapes (all geometry asserts
+hold verbatim), and :func:`pool_scatter` / :func:`copy_page` writes stay
+plain ``jnp`` ops that GSPMD partitions. The decode read path is the
+exception: the paged cascade verify runs under ``shard_map``
+(``distributed.spdecode.sharded_paged_cache_attend``), where each shard
+gathers its local ``pool_view``, masks by the ABSOLUTE positions its
+non-contiguous slots represent, and one float32 LSE ``psum`` merges the
+per-shard attention stats — token-identical to the single-device path.
+Borrowed pools carry this placement across wave turnover untouched
+(``core.state.capture_pools`` / ``adopt_pools``).
 """
 from __future__ import annotations
 
@@ -182,9 +202,30 @@ def default_page_layout(batch: int, max_len: int, page_size: int,
 def init_pool(pool_pages: int, page_size: int, num_kv_heads: int,
               head_dim: int, dtype=jnp.bfloat16, lead: tuple = ()):
     """Zeroed K or V page pool [*lead, P, page, Hkv, Dh] (lead = stacked
-    layer axes: drafter layers or scanned periods)."""
-    return jnp.zeros((*lead, pool_pages, page_size, num_kv_heads, head_dim),
+    layer axes: drafter layers or scanned periods).
+
+    Under an active mesh with a ``kv_seq`` rule the pool's page *payloads*
+    are placed shard-wise along the within-page position axis (shard i of
+    P holds slots ``[i*page/P, (i+1)*page/P)`` of every page) while the
+    array stays logically global-shaped — page ids, tables, and every
+    geometry assert are layout-agnostic. See :func:`shard_pool`.
+    """
+    pool = jnp.zeros((*lead, pool_pages, page_size, num_kv_heads, head_dim),
                      dtype)
+    return shard_pool(pool, lead=len(lead))
+
+
+def shard_pool(pool, lead: int = 0):
+    """Place a page pool's payload bytes along the ``kv_seq`` mesh axis.
+
+    The sharded dim is the within-page position axis (``ndim - 3``); the
+    mesh axis is dropped automatically when ``page_size`` is not divisible
+    by the axis size (``fit_spec``), and the whole call is a no-op without
+    a mesh. Works eagerly (engine pool allocation, adopted buffers) and
+    inside jit (``_ondevice_loop``'s traced ``engine_init``).
+    """
+    from repro.distributed.sharding import shard_put
+    return shard_put(pool, (None,) * lead + (None, "kv_seq", None, None))
 
 
 def _norm_table(table):

@@ -106,9 +106,36 @@ only and ``accepted`` draft tokens wired from the verify backends'
 prefix-cache counters (``prefix_hits`` / ``prefix_misses`` /
 ``prefix_hit_tokens`` / ``prefill_tokens_saved`` / ``cow_copies`` /
 ``prefix_evictions``).
+
+Mesh residency (sharded resident serving): construct the engine inside a
+``use_sharding(mesh, ...)`` context (``launch/serve.py --mesh-model`` /
+``--kv-seq-axis``) and ONE engine spans the mesh. The invariant is
+**page identity is global, page bytes are per-shard**: every host-side
+structure above — allocator free list, refcounts, radix tree, page
+tables, admission accounting, ``_pool_budget`` — is unchanged and counts
+GLOBAL pages, while each page's payload bytes are laid out along the
+``kv_seq`` mesh axis (``page_size // kv_shards`` slots of every page per
+shard; :func:`~repro.models.kvcache.shard_pool`). Decode's paged
+cascade verify runs under ``shard_map`` with the per-shard cache
+contribution merged by one float32 LSE ``psum``
+(:func:`~repro.distributed.spdecode.sharded_paged_cache_attend`), so
+per-request tokens are identical to the single-device engine (asserted
+by ``tests/test_sharded_serving.py`` and ``--suite sharded``). The
+borrowed-pool contract is shard-preserving: :func:`capture_pools` /
+``engine_init(pools=...)`` hand the SAME device buffers (and hence
+their kv_seq layout) across wave turnover, zero-copy. The engine
+captures the construction-time mesh context and re-enters it around
+every device-facing call (the context is threadlocal and the async
+front-end drives the engine from a worker thread), and threads
+``sharding.mesh_tag()`` as a static cache-splitter into every jit so
+sharded and unsharded engines coexist in one process. Stats gain
+``kv_shards``, ``pool_shard_slots`` (per-shard slot capacity:
+``pool_pages * page_size / kv_shards``) and ``decode_collective_bytes``
+(accounting model of the bytes the verify psum moves per decode cycle).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -119,6 +146,8 @@ import numpy as np
 from repro.core import pipeline as pl
 from repro.core.state import (EngineState, capture_pools, cow_copy_page,
                               install_row, install_rows, refill_copy_bytes)
+from repro.distributed import sharding as sh
+from repro.distributed import spdecode
 from repro.models import kvcache as kvc
 from repro.serving.metrics import Clock, MetricsRecorder, MonotonicClock
 from repro.serving.prefix_cache import PrefixCache, PrefixHit
@@ -208,6 +237,25 @@ class ServingEngine:
                 "cache_impl='paged' requires early_exit=True: idle slots "
                 "must be masked so they cannot write through stale page "
                 "tables into freed (reallocated) pages")
+        # mesh residency: capture the ambient sharding context ONCE at
+        # construction. One engine spans the whole mesh — pool payloads
+        # are laid out along the kv_seq axis (page bytes per-shard, page
+        # IDENTITY global: the host allocator / radix tree / page tables
+        # below never see the mesh). Every device-facing call site
+        # re-enters the context via _mesh_scope so the engine keeps
+        # working when driven from another thread (the async front-end's
+        # worker: sharding._CTX is threadlocal).
+        self._mesh = sh.active_mesh()
+        self._rules = dict(sh._CTX.rules) if self._mesh is not None else None
+        self._fsdp = sh.fsdp_enabled()
+        self._shard_tag = sh.mesh_tag()
+        self.kv_shards = spdecode.kv_seq_shards()
+        if cache_impl == "paged" and page_size % self.kv_shards != 0:
+            raise ValueError(
+                f"page_size={page_size} must be divisible by the kv_seq "
+                f"mesh axis size ({self.kv_shards}): page payloads are "
+                f"split WITHIN the page — each shard owns "
+                f"page_size // n_shards slots of every page")
         self.bundle = bundle
         self.batch_size = batch_size
         self.early_exit = early_exit
@@ -242,9 +290,13 @@ class ServingEngine:
         self.key = jax.random.PRNGKey(seed)
         self._next_uid = 0
         self.wave: Optional[Wave] = None
-        # shares pipeline's module-level trace cache across engine instances
+        # shares pipeline's module-level trace cache across engine
+        # instances; shard_tag splits that cache between sharded and
+        # unsharded engines living in one process (jit keys on avals,
+        # not on the threadlocal mesh context the trace reads)
         self._cycle = lambda s, k: pl._cycle_jit(self.bundle, s, k,
-                                                 collect_stats=False)
+                                                 collect_stats=False,
+                                                 shard_tag=self._shard_tag)
         self.stats = {"tokens": 0, "cycles": 0, "accepted": 0,
                       "wall_s": 0.0, "waves": 0, "alpha": 0.0,
                       "wasted_row_cycles": 0, "refills": 0,
@@ -255,12 +307,30 @@ class ServingEngine:
                       "prefix_hits": 0, "prefix_misses": 0,
                       "prefix_hit_tokens": 0, "prefill_tokens_saved": 0,
                       "cow_copies": 0, "prefix_evictions": 0,
-                      "prefix_cached_pages": 0}
+                      "prefix_cached_pages": 0,
+                      "kv_shards": self.kv_shards,
+                      "pool_shard_slots": 0,
+                      "decode_collective_bytes": 0}
         self._alpha_num = 0
         self._alpha_den = 0
         self._util_sum = 0.0
         self._util_samples = 0
         self._install_shapes = set()
+        # per-cycle decode-collective payload (bytes moved by the verify
+        # LSE psum per cycle), learned from the first fresh decode trace
+        self._cycle_payload = 0
+
+    @contextlib.contextmanager
+    def _mesh_scope(self):
+        """Re-enter the construction-time sharding context around a
+        device-facing call. The context is threadlocal; the async
+        front-end drives the engine from a worker thread that never saw
+        the caller's ``use_sharding`` block."""
+        if self._mesh is None:
+            yield
+        else:
+            with sh.use_sharding(self._mesh, self._rules, fsdp=self._fsdp):
+                yield
 
     def submit(self, prompt: np.ndarray, max_new: int,
                t_arrival: Optional[float] = None) -> int:
@@ -319,7 +389,16 @@ class ServingEngine:
         are deliberately NOT summed in: they run in slots the live set
         vacates, so counting their full needs on top of the live set (the
         old ``sum(need)`` rule) double-counted them; only their retired
-        prefixes — bounded by the headroom — need extra pages."""
+        prefixes — bounded by the headroom — need extra pages.
+
+        Mesh residency: the budget counts GLOBAL pages — one allocation
+        decision, P-way placement. Each page's payload bytes are split
+        along the ``kv_seq`` mesh axis (``page_size // kv_shards`` slots
+        of every page per shard), so the per-device budget this global
+        count implies is ``pool bytes / kv_shards``; ``pool_shard_slots``
+        in :attr:`stats` reports the per-shard slot capacity directly.
+        Page identity (allocator, refcounts, radix tree, page tables)
+        never shards."""
         live = sum(need[:b])
         if not self.prefix_cache:
             return live
@@ -400,21 +479,29 @@ class ServingEngine:
             # and the transient pool-sized zero allocation the old
             # init-then-adopt_pools sequence paid is never materialized.
             # Drop our reference: the wave's first donated install
-            # consumes the state.
-            state = pl.engine_init(self.bundle, b, mp * self.page_size,
-                                   cache_impl="paged",
-                                   page_size=self.page_size,
-                                   pool_pages=pool_pages, page_table=table,
-                                   pools=self._pools)
+            # consumes the state. engine_init runs under the mesh scope:
+            # fresh pool buffers are device_put along kv_seq at birth
+            # (adopted buffers pass through untouched — zero-copy).
+            with self._mesh_scope():
+                state = pl.engine_init(self.bundle, b, mp * self.page_size,
+                                       cache_impl="paged",
+                                       page_size=self.page_size,
+                                       pool_pages=pool_pages,
+                                       page_table=table,
+                                       pools=self._pools)
             self._pools = None
             # lifetime max, matching pool_peak_pages' scope — a small
             # leftover wave must not shrink the reported pool below the
             # peak measured in an earlier, larger wave
             self.stats["pool_pages"] = max(self.stats["pool_pages"],
                                            pool_pages)
+            self.stats["pool_shard_slots"] = max(
+                self.stats["pool_shard_slots"],
+                pool_pages * (self.page_size // self.kv_shards))
         else:
             max_len = max(self._cache_needed(r, g) for r in cand)
-            state = pl.engine_init(self.bundle, b, max_len)
+            with self._mesh_scope():
+                state = pl.engine_init(self.bundle, b, max_len)
         state = state.replace(active=jnp.zeros((b,), bool))
         self.wave = Wave(requests=[None] * b, state=state,
                          bufs=np.zeros((b, cap), np.int32),
@@ -452,68 +539,86 @@ class ServingEngine:
         top = self.bucket_sizes[-1]
         return -(-n // top) * top
 
-    def _install(self, slot: int, r: Request) -> None:
+    def _prep_install(self, slot: int, r: Request) -> int:
+        """Host-side admission work for one install: prefix-cache match,
+        page allocation, table splice, COW. Returns the matched prefix
+        length (0 = cold install; dense mode is always 0).
+
+        Split from the device dispatch so :meth:`_install_group` can prep
+        a whole admission group FIRST (in pick order — each lookup sees
+        the radix tree exactly as the previous prep left it) and then
+        batch the dispatches by the ACTUAL outcome (suffix bucket ×
+        warm/cold), prefix hits included."""
+        w = self.wave
+        if self.cache_impl != "paged":
+            return 0
+        prompt = np.asarray(r.prompt, np.int32)
+        g = self.bundle.spec.gamma
+        n_total = self._pages_needed(r, g)
+        hit = w.cache.lookup(prompt) if w.cache is not None else None
+        if hit is not None:
+            w.cache.acquire(hit)        # pin shared pages + COW source
+        n_new = n_total - (len(hit.shared) if hit else 0)
+        if w.pool.free_pages < n_new and w.cache is not None:
+            w.cache.evict_for(n_new)
+        pages = w.pool.alloc(n_new)
+        if pages is None and hit is not None:
+            # tight pool: the admission guarantee (_fits) is for the
+            # miss shape — give the hit back and install cold
+            w.cache.release_partial(hit)
+            w.cache.release(hit)
+            hit = None
+            w.cache.evict_for(n_total)
+            pages = w.pool.alloc(n_total)
+        assert pages is not None, "admission control must guarantee pages"
+        w.row_pages[slot] = pages
+        shared = hit.shared if hit else []
+        w.row_tables[slot] = w.pool.row_table(shared + pages,
+                                              w.state.max_pages)
+        if hit is not None:
+            if hit.partial is not None:
+                # COW: duplicate the shared partial tail page into the
+                # row's first private page BEFORE any write lands there
+                # (a page with refcount > 1 is never written)
+                w.state = cow_copy_page(w.state, hit.partial, pages[0])
+                self.stats["cow_copies"] += 1
+            w.cache.release_partial(hit)
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += hit.length
+            # tokens the suffix prefill actually skips relative to a
+            # cold install — measured in BUCKETED lengths, so padding
+            # that a cold install would have paid anyway counts as
+            # saved and padding the suffix re-pays is deducted
+            self.stats["prefill_tokens_saved"] += (
+                self._bucket(len(prompt))
+                - self._bucket(len(prompt) - hit.length))
+        elif w.cache is not None:
+            self.stats["prefix_misses"] += 1
+        w.row_hits[slot] = hit
+        return hit.length if hit else 0
+
+    def _install(self, slot: int, r: Request,
+                 prefix_len: Optional[int] = None) -> None:
         """Prefill ``r`` into ``slot`` of the running batch (slot refill).
 
         The donated :func:`install_row` consumes the old wave state, so
         the splice / page writes happen in place — no full-state copy in
         either impl. Paged mode additionally allocates the request's
-        pages here (freed again by :meth:`_retire`); with the prefix
-        cache on, the prompt is first matched against the radix tree:
-        the matched prefix's full pages are spliced read-only into the
-        row's table, a mid-page match tail is COW-copied, and only the
-        uncached suffix is prefilled.
+        pages via :meth:`_prep_install` (freed again by :meth:`_retire`);
+        with the prefix cache on, the prompt is first matched against the
+        radix tree: the matched prefix's full pages are spliced read-only
+        into the row's table, a mid-page match tail is COW-copied, and
+        only the uncached suffix is prefilled. ``prefix_len`` short-
+        circuits the prep when :meth:`_install_group` already ran it.
         """
         w = self.wave
         self.key, sub = jax.random.split(self.key)
+        if prefix_len is None:
+            prefix_len = self._prep_install(slot, r)
+        hit = w.row_hits[slot] if w.row_hits is not None else None
+        row_table = (w.row_tables[slot] if self.cache_impl == "paged"
+                     else None)
         prompt = np.asarray(r.prompt, np.int32)
-        row_table = None
-        hit = None
-        if self.cache_impl == "paged":
-            g = self.bundle.spec.gamma
-            n_total = self._pages_needed(r, g)
-            if w.cache is not None:
-                hit = w.cache.lookup(prompt)
-            if hit is not None:
-                w.cache.acquire(hit)        # pin shared pages + COW source
-            n_new = n_total - (len(hit.shared) if hit else 0)
-            if w.pool.free_pages < n_new and w.cache is not None:
-                w.cache.evict_for(n_new)
-            pages = w.pool.alloc(n_new)
-            if pages is None and hit is not None:
-                # tight pool: the admission guarantee (_fits) is for the
-                # miss shape — give the hit back and install cold
-                w.cache.release_partial(hit)
-                w.cache.release(hit)
-                hit = None
-                w.cache.evict_for(n_total)
-                pages = w.pool.alloc(n_total)
-            assert pages is not None, "admission control must guarantee pages"
-            w.row_pages[slot] = pages
-            shared = hit.shared if hit else []
-            row_table = w.pool.row_table(shared + pages, w.state.max_pages)
-            w.row_tables[slot] = row_table
-            if hit is not None:
-                if hit.partial is not None:
-                    # COW: duplicate the shared partial tail page into the
-                    # row's first private page BEFORE any write lands there
-                    # (a page with refcount > 1 is never written)
-                    w.state = cow_copy_page(w.state, hit.partial, pages[0])
-                    self.stats["cow_copies"] += 1
-                w.cache.release_partial(hit)
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_hit_tokens"] += hit.length
-                # tokens the suffix prefill actually skips relative to a
-                # cold install — measured in BUCKETED lengths, so padding
-                # that a cold install would have paid anyway counts as
-                # saved and padding the suffix re-pays is deducted
-                self.stats["prefill_tokens_saved"] += (
-                    self._bucket(len(prompt))
-                    - self._bucket(len(prompt) - hit.length))
-            elif w.cache is not None:
-                self.stats["prefix_misses"] += 1
-        w.row_hits[slot] = hit
-        prefix_len = hit.length if hit else 0
         suffix = prompt[prefix_len:]
         s = len(suffix)
         true_len = None
@@ -535,11 +640,14 @@ class ServingEngine:
         self.stats["install_calls"] += 1
         if self.recorder is not None:
             self.recorder.on_admit(r.uid)
-        w.state = install_row(self.bundle, w.state, slot, suffix, key=sub,
-                              temperature=self.bundle.spec.temperature,
-                              row_table=row_table,
-                              prefix_hit=prefix_len if hit else None,
-                              true_len=true_len)
+        with self._mesh_scope():
+            w.state = install_row(self.bundle, w.state, slot, suffix,
+                                  key=sub,
+                                  temperature=self.bundle.spec.temperature,
+                                  row_table=row_table,
+                                  prefix_hit=prefix_len if hit else None,
+                                  true_len=true_len,
+                                  shard_tag=self._shard_tag)
         self.clock.tick("install")
         self._book_install(slot, r)
 
@@ -580,78 +688,84 @@ class ServingEngine:
         w.pending_anchor.clear()
 
     def _install_group(self, picks: List[Tuple[int, Request]]) -> None:
-        """Install (slot, request) picks, collapsing same-length-bucket
-        groups into ONE batched :func:`install_rows` dispatch each.
+        """Install (slot, request) picks, collapsing same-suffix-bucket
+        groups into ONE batched :func:`install_rows` dispatch each —
+        prefix-cache hits included.
 
-        The batched path requires greedy anchors (temperature 0: argmax is
-        key-independent, so one shared PRNG key is token-identical to
-        per-request keys) and no prefix cache (hits need per-row warm
-        starts / COW orchestration); otherwise every pick falls back to
-        the single-slot :meth:`_install`.
+        The batched path requires greedy anchors (temperature 0: argmax
+        is key-independent, so one shared PRNG key is token-identical to
+        per-request keys); sampling picks fall back to the single-slot
+        :meth:`_install`. With the radix cache on, all host-side prep
+        (lookup / page alloc / COW splice) runs FIRST in pick order —
+        each lookup sees the tree exactly as the previous prep left it,
+        so an earlier pick's eviction can't invalidate a later pick's
+        planned group — then picks group by their ACTUAL outcome:
+        (suffix bucket, warm/cold). Warm rows with different prefix
+        lengths share one batch (``install_rows(prefix_hits=[K])`` takes
+        a per-row start vector); mixed warm/cold groups are disallowed
+        by the state layer, hence the cold/warm key split.
         """
-        w = self.wave
-        if (self.bundle.spec.temperature > 0 or w.cache is not None
-                or len(picks) <= 1):
+        if self.bundle.spec.temperature > 0 or len(picks) <= 1:
             for slot, r in picks:
                 self._install(slot, r)
             return
-        groups: Dict[int, List[Tuple[int, Request]]] = {}
-        for slot, r in picks:
-            groups.setdefault(self._bucket(len(r.prompt)), []).append(
-                (slot, r))
-        for pad, grp in sorted(groups.items()):
+        prepped = [(slot, r, self._prep_install(slot, r))
+                   for slot, r in picks]
+        groups: Dict[Tuple[int, bool],
+                     List[Tuple[int, Request, int]]] = {}
+        for slot, r, pfx in prepped:
+            key = (self._bucket(len(r.prompt) - pfx), pfx > 0)
+            groups.setdefault(key, []).append((slot, r, pfx))
+        for (pad, warm), grp in sorted(groups.items()):
             if len(grp) == 1:
-                self._install(*grp[0])
+                slot, r, pfx = grp[0]
+                self._install(slot, r, prefix_len=pfx)
             else:
-                self._install_batch(grp, pad)
+                self._install_batch(grp, pad, warm)
 
-    def _install_batch(self, grp: List[Tuple[int, Request]], pad: int
-                       ) -> None:
-        """One donated batch-K install for K same-bucket cold requests."""
+    def _install_batch(self, grp: List[Tuple[int, Request, int]], pad: int,
+                       warm: bool = False) -> None:
+        """One donated batch-K install for K same-suffix-bucket requests
+        (already prepped by :meth:`_prep_install`; all cold or all warm —
+        warm rows may carry different prefix lengths)."""
         w = self.wave
         self.key, sub = jax.random.split(self.key)
-        g = self.bundle.spec.gamma
         k = len(grp)
         row_tables = None
         if self.cache_impl == "paged":
-            tables = []
-            for slot, r in grp:
-                pages = w.pool.alloc(self._pages_needed(r, g))
-                assert pages is not None, \
-                    "admission control must guarantee pages"
-                w.row_pages[slot] = pages
-                w.row_tables[slot] = w.pool.row_table(pages,
-                                                      w.state.max_pages)
-                w.row_hits[slot] = None
-                tables.append(w.row_tables[slot])
-                if w.cache is not None:
-                    self.stats["prefix_misses"] += 1
-            row_tables = np.stack(tables)
+            row_tables = np.stack([w.row_tables[slot]
+                                   for slot, _, _ in grp])
         prompts = np.zeros((k, pad), np.int32)
         true = np.zeros((k,), np.int32)
-        for i, (slot, r) in enumerate(grp):
-            p = np.asarray(r.prompt, np.int32)
-            prompts[i, : len(p)] = p
-            true[i] = len(p)
+        pfx = np.zeros((k,), np.int32)
+        for i, (slot, r, p0) in enumerate(grp):
+            sfx = np.asarray(r.prompt, np.int32)[p0:]
+            prompts[i, : len(sfx)] = sfx
+            true[i] = len(sfx)
+            pfx[i] = p0
             self.stats["refill_copy_bytes"] += refill_copy_bytes(
-                w.state, len(p))
+                w.state, len(sfx))
             if self.recorder is not None:
                 self.recorder.on_admit(r.uid)
         self._install_shapes.add(
-            (k, pad, False, w.state.batch, w.state.max_len,
+            (k, pad, warm, w.state.batch, w.state.max_len,
              w.pool.n_pages if w.pool is not None else 0))
         self.stats["install_traces"] = len(self._install_shapes)
         self.stats["installs"] += k
         self.stats["install_calls"] += 1
         true_len = true if self.bucket_sizes is not None else None
-        w.state = install_rows(self.bundle, w.state,
-                               np.array([s for s, _ in grp], np.int32),
-                               prompts, key=sub,
-                               temperature=self.bundle.spec.temperature,
-                               row_tables=row_tables, true_len=true_len)
+        with self._mesh_scope():
+            w.state = install_rows(self.bundle, w.state,
+                                   np.array([s for s, _, _ in grp],
+                                            np.int32),
+                                   prompts, key=sub,
+                                   temperature=self.bundle.spec.temperature,
+                                   row_tables=row_tables, true_len=true_len,
+                                   prefix_hits=pfx if warm else None,
+                                   shard_tag=self._shard_tag)
         # ONE dispatch for the whole group: one simulated install charge
         self.clock.tick("install")
-        for slot, r in grp:
+        for slot, r, _ in grp:
             self._book_install(slot, r)
 
     # ---- sizing: single source of truth for allocation and admission ----
@@ -720,7 +834,15 @@ class ServingEngine:
             active=jnp.asarray(active) if self.early_exit
             else jnp.ones((b,), bool))
         self.key, sub = jax.random.split(self.key)
-        w.state, out = self._cycle(w.state, sub)
+        n0 = len(spdecode.PAYLOAD_TRACE)
+        with self._mesh_scope():
+            w.state, out = self._cycle(w.state, sub)
+        if len(spdecode.PAYLOAD_TRACE) > n0:
+            # a fresh decode trace under a mesh just recorded the bytes
+            # its verify LSE-merge collectives move per cycle (one entry
+            # per sharded paged-attend layer); bank the per-cycle sum
+            self._cycle_payload = sum(spdecode.PAYLOAD_TRACE[n0:])
+        self.stats["decode_collective_bytes"] += self._cycle_payload
         w.cycles += 1
         self.clock.tick("cycle")
         if w.pool is not None:

@@ -46,6 +46,16 @@ Both drivers share the engine's injected clock and
 distributions and queue-depth timelines are directly comparable; on a
 :class:`~repro.serving.metrics.VirtualClock` a replay is fully
 deterministic.
+
+Mesh residency: nothing here is mesh-aware by design. The engine
+captures its ``use_sharding`` context at construction and re-enters it
+(threadlocal) around every device-facing call — dispatch, installs,
+``start_wave`` — so this event loop can drive a ``kv_seq``-sharded
+engine from any thread without threading mesh state through the
+scheduler. Batched admissions (``install_rows``) and prefix-hit warm
+starts work identically on a mesh; the cascade verify inside the cycle
+runs under ``shard_map`` with its per-shard stats psum-merged
+(token-identical, see ``serving/engine.py``).
 """
 from __future__ import annotations
 

@@ -42,6 +42,26 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _repro_mesh():
+    """Opt-in mesh context for the whole suite: REPRO_MESH="DxM" (e.g.
+    "1x4") wraps every test in ``use_sharding`` over a (data, model) host
+    mesh with the kv_seq axis on "model" — how ``scripts/tier1.sh --mesh``
+    re-runs the tier-1 suite against the sharded engine. The caller must
+    also export XLA_FLAGS=--xla_force_host_platform_device_count=N; no-op
+    when REPRO_MESH is unset (the default 1-device run)."""
+    spec = os.environ.get("REPRO_MESH")
+    if not spec:
+        yield
+        return
+    from repro.distributed.sharding import LOGICAL_RULES, use_sharding
+    from repro.launch.mesh import make_mesh
+    data, model = (int(x) for x in spec.lower().split("x"))
+    mesh = make_mesh(data=data, model=model)
+    with use_sharding(mesh, dict(LOGICAL_RULES, kv_seq="model")):
+        yield
+
+
 def pure_greedy(tp, tcfg, prompts, n):
     """Reference: cached greedy decoding, one token at a time."""
     b, p = prompts.shape
