@@ -4,6 +4,7 @@ TPU-v5e roofline."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import sys
 import time
 from pathlib import Path
@@ -129,3 +130,17 @@ def measure(method: str, task: str, *, n_prompts: int = 12,
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def merge_bench_json(path, section: str, payload: dict) -> None:
+    """Update one section of a BENCH_*.json file, keeping the others."""
+    p = Path(path)
+    data = {}
+    if p.exists():
+        try:
+            data = json.loads(p.read_text())
+        except ValueError:
+            data = {}
+    data[section] = payload
+    p.write_text(json.dumps(data, indent=2, default=float))
+    print(f"wrote {p} [{section}]")

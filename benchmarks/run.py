@@ -37,6 +37,7 @@ def main() -> None:
                 ("prefix", lambda q: serving_bench.run_prefix(q)),
                 ("resident", lambda q: serving_bench.run_resident(q)),
                 ("sla", lambda q: serving_bench.run_sla(q)),
+                ("bytes", lambda q: serving_bench.run_bytes_model(q)),
                 ("sharded", lambda q: serving_bench.run_sharded(q))]
 
     study_dir = Path(__file__).resolve().parents[1] / "experiments" / "study"

@@ -9,8 +9,13 @@ times —
 * ``early_exit_refill`` — both batching optimizations on, dense KV;
 * ``paged``             — batching optimizations on, ``cache_impl="paged"``
   (page-pool KV storage, page-granular admission, copy-free refill);
+* ``paged_pallas``      — the paged engine with ``attn_impl="pallas"``
+  (cascade kernels read the pool + page table directly; interpret mode
+  on CPU) — the kernelized read path, token-identical by assertion;
 
-and reports tokens/s, ``wasted_row_cycles`` (batch rows that spent a
+and reports tokens/s, ``warm_cycle_s`` (median post-warmup per-cycle
+time — ``wall_s`` is trace/compile-dominated at tiny scale),
+``wasted_row_cycles`` (batch rows that spent a
 decode cycle without a live, unfinished request), pool utilization, and
 ``refill_copy_bytes`` — the accounting model of bytes each slot install
 writes (dense: a full ``max_len`` row per cache; paged: prompt-sized
@@ -48,6 +53,13 @@ per-shard pool placement (``pool_shard_slots``, utilization) and the
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` when the
 host exposes fewer than 4 devices.
 
+``--suite bytes`` emits the ``bytes_model`` section: analytic
+bytes-moved-per-decode-cycle for the gather vs pallas read paths
+(``roofline/bytes_model.py``) swept over live length and capacity, plus
+gather/dynamic-slice byte attribution of the actual compiled decode
+cycle (``roofline/hlo_analysis.py``). Asserts the scaling claim: kernel
+bytes grow with LIVE cache length, gather bytes with CAPACITY.
+
 Needs no trained study artifacts — builds a tiny random bundle. The
 bundle uses a SMALL vocab (17): with random-init drafters the chance a
 draft token matches the target argmax scales as ~1/vocab, and the
@@ -70,7 +82,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, merge_bench_json
 from benchmarks.engine_bench import _tiny_bundle
 from repro.serving.engine import ServingEngine
 
@@ -94,15 +106,7 @@ def _traffic(vocab: int, quick: bool):
 
 def _merge_bench_json(section: str, payload: dict) -> None:
     """Update one section of BENCH_serving.json, keeping the others."""
-    data = {}
-    if BENCH_PATH.exists():
-        try:
-            data = json.loads(BENCH_PATH.read_text())
-        except ValueError:
-            data = {}
-    data[section] = payload
-    BENCH_PATH.write_text(json.dumps(data, indent=2, default=float))
-    print(f"wrote {BENCH_PATH} [{section}]")
+    merge_bench_json(BENCH_PATH, section, payload)
 
 
 def _serve(bundle, reqs, batch: int, early_exit: bool = True,
@@ -129,6 +133,7 @@ def _row(name, s):
     print(csv_row(
         name, s["wall_s"] * 1e6,
         f"tokens_per_s={s['tokens_per_s']:.1f} "
+        f"warm_cycle_s={s.get('warm_cycle_s', 0.0):.4f} "
         f"wasted_row_cycles={s['wasted_row_cycles']} "
         f"alpha={s['alpha']:.3f} accepted={s['accepted']} "
         f"waves={s['waves']} refills={s['refills']} "
@@ -141,15 +146,21 @@ def run(quick: bool = False) -> None:
     bundle = _tiny_bundle(gamma, k, vocab=VOCAB)
     reqs = _traffic(bundle.target_cfg.vocab_size, quick)
 
+    from repro.core import pipeline as pl
+
     base, base_out = _serve(bundle, reqs, batch, early_exit=False,
                             refill=False)
     opt, opt_out = _serve(bundle, reqs, batch)
     pgd, pgd_out = _serve(bundle, reqs, batch, cache_impl="paged")
-    tokens_equal = base_out == opt_out == pgd_out
+    # kernelized read path A/B: same paged engine, attn_impl="pallas"
+    # (interpret mode on CPU) — must be token-identical to the gather path
+    pal, pal_out = _serve(pl.with_attn_impl(bundle, "pallas"), reqs, batch,
+                          cache_impl="paged")
+    tokens_equal = base_out == opt_out == pgd_out == pal_out
     assert tokens_equal, "batching/storage config changed per-request output"
     # real acceptance statistics, wired from the verify backends' n_acc
     # (vocab=17 guarantees the random bundle accepts some draft tokens)
-    for s in (base, opt, pgd):
+    for s in (base, opt, pgd, pal):
         assert s["accepted"] > 0 and s["alpha"] > 1.0, (
             "degenerate acceptance stats", s["accepted"], s["alpha"])
     # copy-free refill acceptance: paged installs write page-order bytes
@@ -160,6 +171,7 @@ def run(quick: bool = False) -> None:
     _row("serving_legacy_waves", base)
     _row("serving_early_exit_refill", opt)
     _row("serving_paged_kv", pgd)
+    _row("serving_paged_kv_pallas", pal)
     saved = base["wasted_row_cycles"] - opt["wasted_row_cycles"]
     copy_ratio = (opt["refill_copy_bytes"] / pgd["refill_copy_bytes"]
                   if pgd["refill_copy_bytes"] else float("inf"))
@@ -175,6 +187,7 @@ def run(quick: bool = False) -> None:
         "legacy_waves": dict(base),
         "early_exit_refill": dict(opt),
         "paged": dict(pgd),
+        "paged_pallas": dict(pal),
         "tokens_equal": tokens_equal,
         "wasted_row_cycles_saved": saved,
         "refill_copy_bytes_dense_over_paged": copy_ratio,
@@ -457,6 +470,119 @@ def run_resident(quick: bool = False) -> None:
     })
 
 
+# ------------------------------------------------------- bytes-model suite -
+def _cycle_hlo_stats(bundle, batch: int, max_len: int):
+    """gather/dynamic-slice bytes of ONE compiled decode cycle."""
+    import jax
+    from repro.core import pipeline as pl
+    from repro.core.state import engine_init
+    from repro.roofline.hlo_analysis import analyze_hlo_text
+
+    state = engine_init(bundle, batch, max_len, cache_impl="paged",
+                        page_size=PAGE_SIZE)
+    key = jax.random.PRNGKey(0)
+    txt = (pl._cycle_jit.lower(bundle, state, key, collect_stats=False,
+                               shard_tag=None).compile().as_text())
+    t = analyze_hlo_text(txt)
+    return {"gather_bytes": t["gather_bytes"],
+            "dynamic_slice_bytes": t["dynamic_slice_bytes"]}
+
+
+def run_bytes_model(quick: bool = False) -> None:
+    """Attributable bytes-moved-per-decode-cycle: gather vs pallas.
+
+    Two attributions land in ``BENCH_serving.json[bytes_model]``:
+
+    * **analytic** (``roofline/bytes_model.py``): paged-cache read bytes
+      per cycle priced from config + geometry, swept over live cache
+      length at fixed capacity and over capacity at fixed live length.
+      Asserted shape of the claim: kernel-path bytes grow with LIVE
+      length and are capacity-flat; gather-path bytes grow with CAPACITY
+      and are live-length-flat.
+    * **hlo** (``roofline/hlo_analysis.py``): gather / dynamic-slice
+      result bytes of the actual compiled decode cycle for both impls.
+      The gather path materializes capacity-sized pool_view gathers; the
+      kernel path (interpret mode on CPU) only dynamic-slices page
+      blocks — asserted strictly fewer gather bytes.
+    """
+    from repro.core import pipeline as pl
+    from repro.roofline import bytes_model as bm
+
+    gamma, k = (4, 2) if quick else (5, 2)
+    batch = 2
+    bundle = _tiny_bundle(gamma, k, vocab=VOCAB)
+    tcfg, d1, d2 = bundle.target_cfg, bundle.d1_cfg, bundle.d2_cfg
+
+    cap_pages = 8 if quick else 16
+    cap = cap_pages * PAGE_SIZE
+    live_sweep = sorted({PAGE_SIZE, cap // 4, cap // 2, cap})
+    curves = {"gather": [], "pallas": []}
+    for impl in ("gather", "pallas"):
+        for clen in live_sweep:
+            curves[impl].append(bm.cycle_read_bytes(
+                tcfg, d1, d2, batch=batch, page_size=PAGE_SIZE,
+                max_pages=cap_pages, cache_len=clen, impl=impl))
+    cap_sweep = [cap_pages, cap_pages * 2, cap_pages * 4]
+    cap_curves = {"gather": [], "pallas": []}
+    for impl in ("gather", "pallas"):
+        for mp in cap_sweep:
+            cap_curves[impl].append(bm.cycle_read_bytes(
+                tcfg, d1, d2, batch=batch, page_size=PAGE_SIZE,
+                max_pages=mp, cache_len=PAGE_SIZE * 2, impl=impl))
+
+    # the acceptance-criterion shape, asserted
+    pal_tot = [c["total"] for c in curves["pallas"]]
+    gat_tot = [c["total"] for c in curves["gather"]]
+    assert all(a < b for a, b in zip(pal_tot, pal_tot[1:])), (
+        "kernel-path bytes must grow with live cache length", pal_tot)
+    assert len(set(gat_tot)) == 1, (
+        "gather-path bytes must be flat in live length", gat_tot)
+    gat_cap = [c["total"] for c in cap_curves["gather"]]
+    pal_cap = [c["total"] for c in cap_curves["pallas"]]
+    assert all(a < b for a, b in zip(gat_cap, gat_cap[1:])), (
+        "gather-path bytes must grow with capacity", gat_cap)
+    assert len(set(pal_cap)) == 1, (
+        "kernel-path bytes must be flat in capacity", pal_cap)
+
+    hlo = {
+        "gather": _cycle_hlo_stats(bundle, batch, cap),
+        "pallas": _cycle_hlo_stats(pl.with_attn_impl(bundle, "pallas"),
+                                   batch, cap),
+    }
+    assert hlo["pallas"]["gather_bytes"] < hlo["gather"]["gather_bytes"], (
+        "kernel path should gather strictly fewer bytes per cycle", hlo)
+
+    for impl in ("gather", "pallas"):
+        lo, hi = curves[impl][0]["total"], curves[impl][-1]["total"]
+        print(csv_row(
+            f"bytes_model_{impl}", 0.0,
+            f"live={live_sweep[0]}..{live_sweep[-1]} "
+            f"bytes={lo:.0f}..{hi:.0f} "
+            f"hlo_gather_bytes={hlo[impl]['gather_bytes']:.0f} "
+            f"hlo_dynslice_bytes={hlo[impl]['dynamic_slice_bytes']:.0f}"))
+    ratio = gat_tot[0] / pal_tot[0]
+    print(csv_row("bytes_model_win_at_min_live", 0.0,
+                  f"gather/pallas={ratio:.1f}x at live={live_sweep[0]} "
+                  f"cap={cap}"))
+
+    _merge_bench_json("bytes_model", {
+        "config": {"gamma": gamma, "k": k, "batch": batch, "quick": quick,
+                   "page_size": PAGE_SIZE, "vocab": VOCAB,
+                   "capacity_pages": cap_pages, "live_sweep": live_sweep,
+                   "capacity_sweep_pages": cap_sweep},
+        "analytic_vs_live": curves,
+        "analytic_vs_capacity": cap_curves,
+        "hlo_decode_cycle": hlo,
+        "scaling": {
+            "pallas_grows_with_live": True,
+            "gather_flat_in_live": True,
+            "gather_grows_with_capacity": True,
+            "pallas_flat_in_capacity": True,
+            "gather_over_pallas_at_min_live": ratio,
+        },
+    })
+
+
 # ----------------------------------------------------------- sharded suite -
 def _run_sharded_inline(quick: bool) -> None:
     import contextlib
@@ -561,5 +687,7 @@ if __name__ == "__main__":
         run_prefix("--quick" in sys.argv)
     elif "--sharded" in sys.argv:
         run_sharded("--quick" in sys.argv)
+    elif "--bytes-model" in sys.argv:
+        run_bytes_model("--quick" in sys.argv)
     else:
         run("--quick" in sys.argv)

@@ -8,6 +8,10 @@
 #   scripts/tier1.sh --stress   # randomized pool/radix/COW invariant suite:
 #                               # the fixed tier-1 seed PLUS the reroll seeds
 #                               # (marked `slow`, see tests/test_pool_invariants.py)
+#   scripts/tier1.sh --pallas   # only the pallas-marked interpret-mode kernel
+#                               # tests (ref-oracle sweeps + the attn_impl
+#                               # gather-vs-pallas token-parity gate) — the
+#                               # complement of --fast's "not pallas"
 #   scripts/tier1.sh --mesh     # re-run the suite on an 8-device host mesh
 #                               # (XLA_FLAGS=--xla_force_host_platform_device_count=8,
 #                               # REPRO_MESH=1x4: every test wrapped in a
@@ -36,5 +40,9 @@ if [[ "${1:-}" == "--stress" ]]; then
   shift
   exec python -m pytest -x -q tests/test_pool_invariants.py \
     -m "slow or not slow" "$@"
+fi
+if [[ "${1:-}" == "--pallas" ]]; then
+  shift
+  exec python -m pytest -x -q -m pallas "$@"
 fi
 exec python -m pytest -x -q "$@"

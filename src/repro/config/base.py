@@ -88,6 +88,17 @@ class ModelConfig:
     rglru_width: Optional[int] = None          # RG-LRU recurrence width (d_model default)
     conv1d_width: int = 4                      # temporal conv in recurrent block
 
+    # KV-cache read-path implementation for decode/verify steps.
+    #   "gather": materialize a dense logical view via kvcache.pool_view
+    #             (paged) / read the ring buffer (dense) and attend on it.
+    #   "pallas": call the cascade Pallas kernels directly on the cache
+    #             buffers (paged: pool + page table, no per-cycle gather).
+    # jit-static: configs ride in SpecBundle aux_data, so flipping this
+    # retraces the cycle. Token-identical to "gather" (interpret mode off
+    # TPU). Rolling local layers and attention-free blocks always use the
+    # plain path regardless of this setting.
+    attn_impl: str = "gather"
+
     # numerics
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
@@ -105,6 +116,8 @@ class ModelConfig:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
         assert self.num_heads % self.num_kv_heads == 0, (
             f"num_heads={self.num_heads} not divisible by kv={self.num_kv_heads}")
+        assert self.attn_impl in ("gather", "pallas"), (
+            f"attn_impl={self.attn_impl!r} not in ('gather', 'pallas')")
 
     # ---- derived ----
     @property

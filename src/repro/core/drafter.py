@@ -47,6 +47,16 @@ class DrafterConfig:
     dtype: str = "bfloat16"
     norm_eps: float = 1e-6
     causal: bool = False               # True => EAGLE-style AR drafter
+    # Feature-cache read path, mirroring ModelConfig.attn_impl (jit-static
+    # via SpecBundle aux_data): "pallas" reads paged feature pools through
+    # the cascade kernel per layer instead of one dense pool_view gather.
+    # Dense caches and kv_seq-sharded runs keep the gather path (sharded
+    # drafter reads stay GSPMD — ROADMAP open item).
+    attn_impl: str = "gather"
+
+    def __post_init__(self):
+        assert self.attn_impl in ("gather", "pallas"), (
+            f"attn_impl={self.attn_impl!r} not in ('gather', 'pallas')")
 
     @property
     def head_dim(self) -> int:
@@ -193,28 +203,40 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
     elif block_mask is None:
         block_mask = jnp.ones((t, t), dtype=bool)
 
+    from repro.distributed import spdecode as _sp
     paged = kvc.is_paged(feat_cache)
-    if paged:
+    # Kernelized paged read (dcfg.attn_impl, jit-static): every layer calls
+    # the cascade kernel on its pool slice + the shared page table — no
+    # dense-sized pool_view gather per cycle. Block slots sit at positions
+    # >= feat_len, so the kernel's causal kpos<=q_abs clamp is subsumed by
+    # its kpos<feat_len mask and both paths attend identically.
+    use_pallas = (paged and dcfg.attn_impl == "pallas"
+                  and _sp.kv_seq_axis() is None)
+    if paged and not use_pallas:
         # logical per-row view gathered once for all drafter layers;
         # garbage beyond feat_len is masked below exactly like the dense
         # cache's zero padding, so both layouts attend identically
         ctx_k = kvc.pool_view(feat_cache["k"], feat_cache["pt"])
         ctx_v = kvc.pool_view(feat_cache["v"], feat_cache["pt"])
+    elif paged:
+        ctx_k, ctx_v = feat_cache["k"], feat_cache["v"]   # [L,P,page,Hkv,Dh]
     else:
         ctx_k, ctx_v = feat_cache["k"], feat_cache["v"]
-    cap = ctx_k.shape[2]
+    cap = (kvc.logical_len(feat_cache) if use_pallas else ctx_k.shape[2])
     tq = t
-    # context visibility: feature entries < feat_len (per-example)
-    ctx_ok = (jnp.arange(cap)[None, None, :]
-              < feat_len[:, None, None])                     # [B,1,cap]
-    ctx_ok = jnp.broadcast_to(ctx_ok, (b, tq, cap))
     if block_mask.ndim == 2:
         blk = jnp.broadcast_to(block_mask[None], (b, tq, t))
     else:
         blk = block_mask
-    full_mask = jnp.concatenate([ctx_ok, blk], axis=-1)
+    full_mask = None
+    if not use_pallas:
+        # context visibility: feature entries < feat_len (per-example)
+        ctx_ok = (jnp.arange(cap)[None, None, :]
+                  < feat_len[:, None, None])                 # [B,1,cap]
+        ctx_ok = jnp.broadcast_to(ctx_ok, (b, tq, cap))
+        full_mask = jnp.concatenate([ctx_ok, blk], axis=-1)
 
-    from repro.distributed import spdecode
+    spdecode = _sp
     axis = spdecode.kv_seq_axis()
     use_sp = False
     if axis is not None and not paged:
@@ -231,7 +253,13 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
         v = dense(lp["wv"], h).reshape(b, t, hkv, dh)
         q = apply_rope(q, positions, dcfg.rope_theta)
         k = apply_rope(k, positions, dcfg.rope_theta)
-        if use_sp:
+        if use_pallas:
+            from repro.kernels import ops as kops
+            y = kops.cascade_attention_paged(
+                q, ctx_k[i].astype(k.dtype), ctx_v[i].astype(v.dtype),
+                feat_cache["pt"], k, v, cache_len=feat_len,
+                q_abs=positions, tree_mask=blk, layout="BTHD")
+        elif use_sp:
             y = spdecode.sharded_cache_attend(
                 q, ctx_k[i].astype(k.dtype),
                 ctx_v[i].astype(v.dtype), k, v,

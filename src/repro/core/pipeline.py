@@ -61,6 +61,23 @@ jax.tree_util.register_pytree_node(
 )
 
 
+def with_attn_impl(bundle: SpecBundle, impl: str) -> SpecBundle:
+    """Bundle with the KV/feature-cache read path set to ``impl``
+    ("gather" | "pallas") on the target AND both drafters.
+
+    Configs live in SpecBundle aux_data, so the returned bundle is a
+    distinct jit-cache key — every decode trace retraces with the selected
+    read path (``ModelConfig.attn_impl`` / ``DrafterConfig.attn_impl``).
+    Token-identical by construction; used by benches/tests for A/B.
+    """
+    return SpecBundle(
+        dataclasses.replace(bundle.target_cfg, attn_impl=impl),
+        dataclasses.replace(bundle.d1_cfg, attn_impl=impl),
+        dataclasses.replace(bundle.d2_cfg, attn_impl=impl),
+        bundle.spec, bundle.target_params, bundle.d1_params,
+        bundle.d2_params)
+
+
 # -------------------------------------------------------------- the cycle --
 def decode_cycle(bundle: SpecBundle, state: EngineState, key,
                  collect_stats: bool = True, shard_tag=None):

@@ -156,7 +156,18 @@ class VerifierBackend:
     LSE psum), while accept/commit logic here sees only global-shaped
     arrays. Callers jitting a backend must thread
     ``sharding.mesh_tag()`` as a static arg (see ``core/pipeline.py``)
-    so sharded and unsharded traces don't collide."""
+    so sharded and unsharded traces don't collide.
+
+    Backends are also read-path-transparent: with
+    ``ModelConfig.attn_impl="pallas"`` the tree-verify forward reads
+    paged caches through ``kernels.ops.cascade_attention_paged`` (page
+    pool + page table handed to the kernel, no per-cycle dense
+    ``pool_view`` gather; interpret mode off-TPU) instead of the default
+    "gather" view — selected per-bundle via
+    ``pipeline.with_attn_impl(bundle, impl)``; the config field is a
+    jit-static so both variants coexist in one process. Per-request
+    tokens are identical across read paths (asserted by the tier-1
+    ``pallas`` marker tests, single-device and sharded)."""
 
     name: str = "?"
 

@@ -153,7 +153,9 @@ def _axis_lse_merge(acc, m, l, axis, merge_dtype):
 def sharded_paged_cache_attend(q, pool_k, pool_v, table, blk_k, blk_v, *,
                                cache_len, q_abs, attn_softcap, blk_mask,
                                page_size: int, kv_chunk: int = 1024,
-                               merge_dtype=jnp.float32):
+                               merge_dtype=jnp.float32,
+                               read_impl: str = "gather",
+                               interpret=None):
     """Paged cascade-verify attention under shard_map: single-softmax over
     [paged cache ++ replicated block] with the pool's page *payloads*
     sharded along the kv_seq axis.
@@ -175,8 +177,24 @@ def sharded_paged_cache_attend(q, pool_k, pool_v, table, blk_k, blk_v, *,
 
     Non-rolling global-attention layers only (the prefix cache's gating);
     ``merge_dtype`` defaults to float32 — see :func:`_axis_lse_merge`.
+
+    ``read_impl`` selects how each shard reads its local pool slice:
+    "gather" (default) materializes the local logical view via
+    ``pool_view``; "pallas" runs the paged cascade phase-1 kernel directly
+    on the local pool + global page table, placing logical page ``i`` at
+    absolute positions ``i*page_size + ax_idx*page_loc + [0, page_loc)``
+    via the kernel's pos_stride/pos_offset parameters. Both feed the SAME
+    fp32 LSE psum merge, so per-request tokens are identical. The pallas
+    branch runs the shard_map with ``check_vma=False`` (jax has no
+    replication rule for pallas_call); outputs are psum-merged, hence
+    replicated, either way.
     """
     from repro.models import kvcache as kvc
+    if read_impl == "pallas":
+        from repro.kernels import cascade_attention as casc
+        from repro.kernels import ops as kops
+        interpret = (kops._default_interpret() if interpret is None
+                     else interpret)
 
     mesh = sh.active_mesh()
     axis = kv_seq_axis()
@@ -215,17 +233,41 @@ def sharded_paged_cache_attend(q, pool_k, pool_v, table, blk_k, blk_v, *,
 
     def shard_fn(qs, pk, pv, tbl, bk, bv, cl, qab, bm):
         ax_idx = jax.lax.axis_index(axis)
-        # local logical view: [B, MP*page_loc, Hkv, Dh] — every page's
-        # local slot run, in page-table order
-        vk = kvc.pool_view(pk, tbl)
-        vv = kvc.pool_view(pv, tbl)
-        t = jnp.arange(mp * page_loc)
-        pos = ((t // page_loc) * page_size + ax_idx * page_loc
-               + (t % page_loc))[None, None, :]
-        acc, m, l = _cache_stats(
-            compat.pvary(qs, (axis,)), vk, vv, offset=0, cap=mp * page_size,
-            clen=cl, qab=qab, window=None, attn_softcap=attn_softcap,
-            rolling=False, kv_chunk=kv_chunk, vary_axes=vary_cache, pos=pos)
+        if read_impl == "pallas":
+            # kernel on the local pool slice: one grid step per local page
+            # run; stride/offset place the run at its absolute positions
+            acc, m, l = casc.cascade_phase1_paged(
+                jnp.swapaxes(compat.pvary(qs, (axis,)), 1, 2),
+                jnp.swapaxes(pk, 1, 2), jnp.swapaxes(pv, 1, 2),
+                compat.pvary(tbl, (axis,)),
+                cache_len=compat.pvary(cl, (axis,)),
+                q_abs=compat.pvary(qab, (axis,)),
+                window=None, attn_softcap=attn_softcap,
+                pos_stride=page_size, pos_offset=ax_idx * page_loc,
+                interpret=interpret)
+            # local split merge, then reshape [B,Hq,...] -> the
+            # attend_chunked stats layout [B,Hkv,G,...] (head h = (h//g, h%g))
+            m_l = m.max(axis=2)
+            cr = jnp.exp(m - m_l[:, :, None])
+            l_l = (l * cr).sum(axis=2)
+            acc_l = (acc * cr[..., None]).sum(axis=2)
+            bl, g = qs.shape[0], hq // hkv
+            acc = acc_l.reshape(bl, hkv, g, tq, dh)
+            m = m_l.reshape(bl, hkv, g, tq)
+            l = l_l.reshape(bl, hkv, g, tq)
+        else:
+            # local logical view: [B, MP*page_loc, Hkv, Dh] — every page's
+            # local slot run, in page-table order
+            vk = kvc.pool_view(pk, tbl)
+            vv = kvc.pool_view(pv, tbl)
+            t = jnp.arange(mp * page_loc)
+            pos = ((t // page_loc) * page_size + ax_idx * page_loc
+                   + (t % page_loc))[None, None, :]
+            acc, m, l = _cache_stats(
+                compat.pvary(qs, (axis,)), vk, vv, offset=0,
+                cap=mp * page_size, clen=cl, qab=qab, window=None,
+                attn_softcap=attn_softcap, rolling=False, kv_chunk=kv_chunk,
+                vary_axes=vary_cache, pos=pos)
         acc_g, m_g, l_g = _axis_lse_merge(acc, m, l, axis, merge_dtype)
         acc_b, m_b, l_b = attend_chunked(
             qs, bk, bv, causal=False, q_offset=0, extra_mask=bm,
@@ -239,7 +281,7 @@ def sharded_paged_cache_attend(q, pool_k, pool_v, table, blk_k, blk_v, *,
         in_specs=(P(bspec), P(None, axis), P(None, axis), P(bspec),
                   P(bspec), P(bspec), P(bspec), P(bspec), P(bspec)),
         out_specs=P(bspec),
-        check_vma=True,
+        check_vma=(read_impl != "pallas"),
     )(q, pool_k, pool_v, table, blk_k, blk_v, clen, qa, blk_mask)
 
 

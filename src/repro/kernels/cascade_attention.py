@@ -220,18 +220,27 @@ def cascade_attention(q, cache_k, cache_v, blk_k, blk_v, *, cache_len,
 
 
 # ------------------------------------------------------------- paged -------
-def _phase1_paged_kernel(pt_ref, cache_len_ref, q_abs_ref,    # scalar prefetch
+def _phase1_paged_kernel(pt_ref, cache_len_ref, q_abs_ref, off_ref,  # scalar prefetch
                          q_ref, k_ref, v_ref,                 # VMEM blocks
                          acc_ref, m_ref, l_ref,               # outputs
                          racc, rm, rl,                        # scratch
-                         *, page, nk_inner, tq, window, softcap, scale):
+                         *, page, pos_stride, nk_inner, tq, window, softcap,
+                         scale):
     """Identical flash accumulation to ``_phase1_kernel`` with one KV page
     per inner step. The physical page was already resolved by the BlockSpec
     index_map (scalar-prefetched page table), so the body only deals in
     LOGICAL key positions: page ``s*nk_inner + jj`` holds positions
     [base, base+page). Unallocated logical pages surface garbage from a
     clamped pool page and die on the ``kpos < cache_len`` mask, exactly
-    like the dense kernel's tail padding."""
+    like the dense kernel's tail padding.
+
+    ``pos_stride``/``off_ref`` decouple logical positions from the local
+    page extent: logical page ``i`` of this buffer covers absolute
+    positions ``[i*pos_stride + off, i*pos_stride + off + page)``. The
+    single-device engine uses the identity (stride == page, off == 0);
+    a kv_seq shard whose pages hold slots ``[ax*page_loc, (ax+1)*page_loc)``
+    of every GLOBAL page passes stride=global page size, off=ax*page_loc.
+    """
     b = pl.program_id(0)
     s = pl.program_id(2)       # split index
     jj = pl.program_id(3)      # inner page step within the split
@@ -251,7 +260,7 @@ def _phase1_paged_kernel(pt_ref, cache_len_ref, q_abs_ref,    # scalar prefetch
         sc = softcap * jnp.tanh(sc / softcap)
 
     clen = cache_len_ref[b]
-    base = (s * nk_inner + jj) * page
+    base = (s * nk_inner + jj) * pos_stride + off_ref[0]
     kpos = base + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
     qpos = q_abs_ref[pl.dslice(b * tq, tq)]                  # [tq]
     qp = qpos[:, None]
@@ -278,7 +287,8 @@ def _phase1_paged_kernel(pt_ref, cache_len_ref, q_abs_ref,    # scalar prefetch
 
 def cascade_phase1_paged(q, pool_k, pool_v, page_table, *, cache_len, q_abs,
                          window=None, attn_softcap=None, scale=None,
-                         n_splits=8, interpret=False):
+                         n_splits=8, interpret=False, pos_stride=None,
+                         pos_offset=None):
     """Split-K flash partials over a PAGED cache.
 
     q [B,Hq,Tq,D]; pools [P,Hkv,page,D]; page_table [B,max_pages] physical
@@ -287,6 +297,20 @@ def cascade_phase1_paged(q, pool_k, pool_v, page_table, *, cache_len, q_abs,
     table is a scalar-prefetch operand so the index_map can address pages
     data-dependently — the TPU analogue of paged attention's block table.
     Returns flash partials acc [B,Hq,ns,Tq,D], m/l [B,Hq,ns,Tq].
+
+    Bytes scale with LIVE length, not capacity: the index_map clamps the
+    logical page step to the row's last live page (``cache_len`` is also a
+    scalar-prefetch operand, so it is available at index time). Pallas
+    elides the DMA when consecutive grid steps resolve to the same block
+    index, so the dead tail of the table costs compute on a resident page
+    but no additional HBM traffic — the body's ``kpos < cache_len`` mask,
+    which works off the UNclamped logical step, still zeroes those scores.
+
+    ``pos_stride`` (static; default = pool page extent) and ``pos_offset``
+    (traced scalar; default 0) place logical page ``i`` at absolute
+    positions ``i*pos_stride + pos_offset + [0, page)`` — how a kv_seq
+    shard attends its non-contiguous slice of every global page
+    (``distributed/spdecode.py``).
     """
     b, hq, tq, d = q.shape
     hkv, page = pool_k.shape[1], pool_k.shape[2]
@@ -308,36 +332,52 @@ def cascade_phase1_paged(q, pool_k, pool_v, page_table, *, cache_len, q_abs,
         mp = mp + pad
     nk_inner = mp // n_splits
 
+    if pos_stride is None:
+        pos_stride = page
     pt = jnp.minimum(page_table, n_phys - 1).reshape(-1)      # [B*MP]
     clen = jnp.broadcast_to(
         jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
     qa = jnp.broadcast_to(
         jnp.asarray(q_abs, jnp.int32).reshape(b, tq), (b, tq)).reshape(-1)
+    off = jnp.asarray(0 if pos_offset is None else pos_offset,
+                      jnp.int32).reshape(-1)[:1]
 
     kernel = functools.partial(
-        _phase1_paged_kernel, page=page, nk_inner=nk_inner, tq=tq,
-        window=window, softcap=attn_softcap, scale=scale)
+        _phase1_paged_kernel, page=page, pos_stride=pos_stride,
+        nk_inner=nk_inner, tq=tq, window=window, softcap=attn_softcap,
+        scale=scale)
 
-    def kv_map(b_, h, s, j, pt_ref, clen_ref, qa_ref, g=g, nki=nk_inner,
-               mp=mp):
-        return (pt_ref[b_ * mp + s * nki + j], h // g, 0, 0)
+    def kv_map(b_, h, s, j, pt_ref, clen_ref, qa_ref, off_ref, g=g,
+               nki=nk_inner, mp=mp, stride=pos_stride):
+        # Clamp the logical step to the last LIVE page: Pallas elides the
+        # DMA when the resolved block index repeats across grid steps, so
+        # the dead tail of the table moves no extra bytes. The body masks
+        # off the duplicated page's scores via the unclamped kpos.
+        step = s * nki + j
+        live = (clen_ref[b_] + stride - 1) // stride
+        step = jnp.minimum(step, jnp.maximum(live - 1, 0))
+        return (pt_ref[b_ * mp + step], h // g, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(b, hq, n_splits, nk_inner),
         in_specs=[
             pl.BlockSpec((1, 1, tq, d),
-                         lambda b_, h, s, j, pt_, cl_, qa_: (b_, h, 0, 0)),
+                         lambda b_, h, s, j, pt_, cl_, qa_, off_:
+                         (b_, h, 0, 0)),
             pl.BlockSpec((1, 1, page, d), kv_map),
             pl.BlockSpec((1, 1, page, d), kv_map),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, 1, tq, d),
-                         lambda b_, h, s, j, pt_, cl_, qa_: (b_, h, s, 0, 0)),
+                         lambda b_, h, s, j, pt_, cl_, qa_, off_:
+                         (b_, h, s, 0, 0)),
             pl.BlockSpec((1, 1, 1, tq),
-                         lambda b_, h, s, j, pt_, cl_, qa_: (b_, h, s, 0)),
+                         lambda b_, h, s, j, pt_, cl_, qa_, off_:
+                         (b_, h, s, 0)),
             pl.BlockSpec((1, 1, 1, tq),
-                         lambda b_, h, s, j, pt_, cl_, qa_: (b_, h, s, 0)),
+                         lambda b_, h, s, j, pt_, cl_, qa_, off_:
+                         (b_, h, s, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((tq, d), jnp.float32),
@@ -355,14 +395,15 @@ def cascade_phase1_paged(q, pool_k, pool_v, page_table, *, cache_len, q_abs,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(pt, clen, qa, q, pool_k, pool_v)
+    )(pt, clen, qa, off, q, pool_k, pool_v)
     return acc, m, l
 
 
 def cascade_attention_paged(q, pool_k, pool_v, page_table, blk_k, blk_v, *,
                             cache_len, q_abs, tree_mask, window=None,
                             attn_softcap=None, scale=None, n_splits=8,
-                            interpret=False):
+                            interpret=False, pos_stride=None,
+                            pos_offset=None):
     """Paged cascade verify: page-table phase-1 + shared phase-2 merge.
 
     Same contract as :func:`cascade_attention` with the long cache given
@@ -375,7 +416,8 @@ def cascade_attention_paged(q, pool_k, pool_v, page_table, blk_k, blk_v, *,
     acc, m, l = cascade_phase1_paged(
         q, pool_k, pool_v, page_table, cache_len=cache_len, q_abs=q_abs,
         window=window, attn_softcap=attn_softcap, scale=scale_v,
-        n_splits=n_splits, interpret=interpret)
+        n_splits=n_splits, interpret=interpret, pos_stride=pos_stride,
+        pos_offset=pos_offset)
     return _merge_with_tree_block(q, blk_k, blk_v, acc, m, l,
                                   tree_mask=tree_mask,
                                   attn_softcap=attn_softcap, scale=scale_v)

@@ -100,7 +100,7 @@ def cascade_attention_paged(q, pool_k, pool_v, page_table, blk_k, blk_v, *,
                             cache_len, q_abs, tree_mask, window=None,
                             attn_softcap=None, scale=None, n_splits=8,
                             interpret: Optional[bool] = None,
-                            layout="BTHD"):
+                            layout="BTHD", pos_stride=None, pos_offset=None):
     """Cascade verify over a PAGED cache (``cache_impl="paged"`` storage).
 
     ``pool_k`` / ``pool_v``: page pools in the engine's storage layout
@@ -109,7 +109,12 @@ def cascade_attention_paged(q, pool_k, pool_v, page_table, blk_k, blk_v, *,
     ``page_table`` [B, max_pages]: physical page of each logical page
     (out-of-range sentinel entries mark unallocated pages). The page table
     is scalar-prefetched so the Pallas kernel DMAs pages straight from the
-    pool — no dense gather of the logical view.
+    pool — no dense gather of the logical view, and the index_map clamps
+    dead logical pages to the last live one so HBM traffic scales with
+    ``cache_len``, not table capacity. ``pos_stride``/``pos_offset``
+    relocate logical page ``i`` to absolute positions
+    ``i*pos_stride + pos_offset + [0, page)`` for kv_seq-sharded pools
+    (see ``cascade_attention.cascade_phase1_paged``).
     """
     interpret = _default_interpret() if interpret is None else interpret
     if layout == "BTHD":
@@ -120,5 +125,6 @@ def cascade_attention_paged(q, pool_k, pool_v, page_table, blk_k, blk_v, *,
     o = casc.cascade_attention_paged(
         q_, pk, pv, page_table, bk_, bv, cache_len=cache_len, q_abs=q_abs,
         tree_mask=tree_mask, window=window, attn_softcap=attn_softcap,
-        scale=scale, n_splits=n_splits, interpret=interpret)
+        scale=scale, n_splits=n_splits, interpret=interpret,
+        pos_stride=pos_stride, pos_offset=pos_offset)
     return jnp.swapaxes(o, 1, 2) if layout == "BTHD" else o

@@ -12,6 +12,18 @@ Mask semantics (composable):
   causal with query offset ``q_offset`` (prefill/decode with cache),
   sliding window, gemma2 attention-logit softcap, explicit extra mask
   (tree/bidirectional-block), and KV length masking for padded caches.
+
+Cache READ path (``ModelConfig.attn_impl``, distinct from the ``impl``
+call parameter above): "gather" (default) materializes the dense logical
+view of a paged cache via ``kvcache.pool_view`` and attends over it with
+one of the three impls; "pallas" routes decode/verify steps on paged
+global layers straight to ``kernels.ops.cascade_attention_paged`` (pool
+buffers + page table, no dense gather — see ``models/blocks.py``).
+``attn_impl`` is a jit-static carried by the config (SpecBundle registers
+configs as pytree aux_data), token-identical by tier-1 assertion, and
+falls back to interpret mode off-TPU. Sliding-window ROLLING local
+layers always use the gather path; the kv_seq-sharded verify honors it
+inside ``shard_map`` (``distributed/spdecode.py``).
 """
 from __future__ import annotations
 

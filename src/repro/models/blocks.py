@@ -298,7 +298,39 @@ def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
                             state["v"].astype(v.dtype), state["pt"], k, v,
                             cache_len=cache_len, q_abs=q_abs,
                             attn_softcap=cfg.attn_softcap, blk_mask=blk_mask,
-                            page_size=page_size, kv_chunk=kv_chunk)
+                            page_size=page_size, kv_chunk=kv_chunk,
+                            read_impl=cfg.attn_impl)
+                if y is None and cfg.attn_impl == "pallas" and axis is None \
+                        and not rolling:
+                    # kernelized read path (cfg.attn_impl, a jit-static):
+                    # cascade kernels consume the cache buffers directly —
+                    # paged: pool + page table, no per-cycle pool_view
+                    # gather. Rolling local layers stay on the gather path
+                    # (the dense kernel's cache padding breaks rolling
+                    # position recovery at non-block-aligned capacities).
+                    from repro.kernels import ops as kops
+                    blk_mask = extra_mask
+                    if blk_mask is None:
+                        tb = k.shape[1]
+                        blk_mask = jnp.tril(jnp.ones((tb, tb), bool))
+                    qa2 = jnp.broadcast_to(
+                        jnp.asarray(q_abs, jnp.int32).reshape(-1, q.shape[1]),
+                        (q.shape[0], q.shape[1]))
+                    if paged:
+                        y = kops.cascade_attention_paged(
+                            q, state["k"].astype(k.dtype),
+                            state["v"].astype(v.dtype), state["pt"], k, v,
+                            cache_len=cache_len, q_abs=qa2,
+                            tree_mask=blk_mask, window=window,
+                            attn_softcap=cfg.attn_softcap, layout="BTHD")
+                    else:
+                        y = kops.cascade_attention(
+                            q, state["k"].astype(k.dtype),
+                            state["v"].astype(v.dtype), k, v,
+                            cache_len=cache_len, q_abs=qa2,
+                            tree_mask=blk_mask, window=window,
+                            attn_softcap=cfg.attn_softcap, rolling=False,
+                            layout="BTHD")
                 if y is None:
                     ck, cv = cache_view()
                     kk = jnp.concatenate([ck, k], axis=1)

@@ -1,0 +1,135 @@
+"""Analytic bytes-moved-per-decode-cycle model for the KV read path.
+
+The point of kernelizing the paged read path (``attn_impl="pallas"``) is a
+BANDWIDTH claim: per decode cycle, the gather path's HBM traffic scales
+with cache *capacity* (``max_pages * page_size`` slots are gathered into a
+dense logical view, written back, and re-read by attention regardless of
+how much of the cache is live), while the kernel path's traffic scales
+with *live* length (the page-table index_map clamps dead logical pages to
+the last live one, and Pallas elides repeated-block DMAs — see
+``kernels/cascade_attention.cascade_phase1_paged``).
+
+This module prices both paths from config + geometry alone so the serving
+bench can emit an attributable ``bytes_model`` section; the companion HLO
+attribution (``hlo_analysis.HloModuleStats``: ``gather_bytes`` /
+``dynamic_slice_bytes`` of the compiled decode cycle) cross-checks the
+shape of the claim on the actual lowering.
+
+Counting rules (deliberately simple, stated so the numbers are auditable):
+
+* Only paged-cache READ traffic of global-attention layers is counted —
+  the part the read-path choice changes. QKV/MLP matmuls, block KV, tree
+  merge, and commit writes are identical across impls and excluded.
+* K and V each count once per layer (factor 2).
+* "gather": pool gather read (capacity slots) + dense logical-view write
+  (capacity slots) + attention re-read of the view (capacity slots) = 3x
+  capacity-sized traffic per layer. This matches what XLA materializes
+  for ``kvcache.pool_view`` + ``attend_cache_plus_block``.
+* "pallas": ceil(live / page_size) page-sized DMA streams per layer —
+  live-length traffic, rounded up to page granularity. Per-kv-head-group
+  revisits and split-K re-streaming are hardware-scheduling details the
+  model ignores on both paths (they multiply both sides equally at fixed
+  geometry).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+def _esize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _global_layers(cfg) -> int:
+    return sum(1 for k in cfg.pattern_for_depth() if k == "global")
+
+
+def target_read_bytes(cfg, *, batch: int, page_size: int, max_pages: int,
+                      cache_len: int, impl: str) -> Dict[str, float]:
+    """Per-cycle paged-cache read bytes of the TARGET's global layers.
+
+    Returns a dict with per-component attribution and a ``total``.
+    """
+    assert impl in ("gather", "pallas"), impl
+    n_l = _global_layers(cfg)
+    slot = cfg.num_kv_heads * cfg.head_dim * _esize(cfg.dtype)
+    cap_slots = max_pages * page_size
+    if impl == "gather":
+        per_layer = batch * cap_slots * slot * 2          # K and V
+        comp = {
+            "pool_gather_read": float(n_l * per_layer),
+            "logical_view_write": float(n_l * per_layer),
+            "attend_view_read": float(n_l * per_layer),
+        }
+    else:
+        live_slots = math.ceil(cache_len / page_size) * page_size
+        comp = {
+            "kernel_page_stream": float(
+                n_l * batch * live_slots * slot * 2),
+        }
+    comp["total"] = float(sum(comp.values()))
+    comp["layers"] = n_l
+    return comp
+
+
+def drafter_read_bytes(dcfg, *, batch: int, page_size: int, max_pages: int,
+                       cache_len: int, impl: str,
+                       drafts_per_cycle: int = 1) -> Dict[str, float]:
+    """Per-cycle paged feature-cache read bytes of ONE drafter.
+
+    Same counting rules as :func:`target_read_bytes`; every drafter layer
+    reads the full feature cache (``core/drafter.py`` injects projected
+    context K/V at each layer). ``drafts_per_cycle``: how many forward
+    passes this drafter runs per decode cycle (the VP second draft runs
+    once per branch batch, still one forward).
+    """
+    assert impl in ("gather", "pallas"), impl
+    n_l = dcfg.num_layers
+    slot = dcfg.num_kv_heads * dcfg.head_dim * _esize(dcfg.dtype)
+    cap_slots = max_pages * page_size
+    if impl == "gather":
+        # pool_view gathers ONCE for all layers (core/drafter.py), then
+        # each layer re-reads the dense view
+        once = batch * cap_slots * slot * 2
+        comp = {
+            "pool_gather_read": float(drafts_per_cycle * once),
+            "logical_view_write": float(drafts_per_cycle * once),
+            "attend_view_read": float(drafts_per_cycle * n_l * once),
+        }
+    else:
+        live_slots = math.ceil(cache_len / page_size) * page_size
+        comp = {
+            "kernel_page_stream": float(
+                drafts_per_cycle * n_l * batch * live_slots * slot * 2),
+        }
+    comp["total"] = float(sum(comp.values()))
+    comp["layers"] = n_l
+    return comp
+
+
+def cycle_read_bytes(tcfg, d1cfg, d2cfg, *, batch: int, page_size: int,
+                     max_pages: int, cache_len: int, impl: str) -> Dict:
+    """Whole-cycle paged read bytes: target verify + both drafters."""
+    tgt = target_read_bytes(tcfg, batch=batch, page_size=page_size,
+                            max_pages=max_pages, cache_len=cache_len,
+                            impl=impl)
+    d1 = drafter_read_bytes(d1cfg, batch=batch, page_size=page_size,
+                            max_pages=max_pages, cache_len=cache_len,
+                            impl=impl)
+    d2 = drafter_read_bytes(d2cfg, batch=batch, page_size=page_size,
+                            max_pages=max_pages, cache_len=cache_len,
+                            impl=impl)
+    return {
+        "impl": impl,
+        "batch": batch,
+        "page_size": page_size,
+        "max_pages": max_pages,
+        "cache_len": cache_len,
+        "target": tgt,
+        "drafter1": d1,
+        "drafter2": d2,
+        "total": tgt["total"] + d1["total"] + d2["total"],
+    }

@@ -8,6 +8,12 @@ its real FLOPs. This analyzer parses ``compiled.as_text()`` and:
   * counts collective bytes per op kind (result bytes, with replica-group
     aware factors: all-reduce 2(n-1)/n, all-gather/reduce-scatter (n-1)/n,
     all-to-all (n-1)/n, collective-permute 1),
+  * counts gather / dynamic-slice RESULT bytes (``gather_bytes`` /
+    ``dynamic_slice_bytes``) — the HBM attribution for the paged cache
+    read path: the "gather" ``attn_impl`` shows capacity-sized pool_view
+    gathers every decode cycle, while the Pallas kernel path (interpret
+    mode on CPU lowers to a grid loop of page-sized dynamic-slices) only
+    ever slices page blocks,
   * multiplies loop bodies by their ``known_trip_count`` (recursively),
 
 yielding per-device totals that are exact for lax.scan-based stacks.
@@ -85,7 +91,8 @@ class HloModuleStats:
     def _analyze_comp(self, name: str, mult: int = 1) -> Dict[str, float]:
         if name in self._cache:
             return self._cache[name]
-        out = {"flops": 0.0, "coll_bytes": 0.0}
+        out = {"flops": 0.0, "coll_bytes": 0.0, "gather_bytes": 0.0,
+               "dynamic_slice_bytes": 0.0}
         for k in _COLLECTIVES:
             out[k] = 0.0
         lines = self.computations.get(name, [])
@@ -127,6 +134,14 @@ class HloModuleStats:
                 for d in (res_dims[0] if res_dims else []):
                     n_res *= d
                 out["flops"] += 2.0 * n_res * contr
+                continue
+            # ---- gathers / dynamic-slices (cache-read attribution) ----
+            ms = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*([\w\[\]\{\},]+)"
+                          r"\s+(gather|dynamic-slice)\(", ln)
+            if ms:
+                nbytes, _ = _shape_bytes_and_dims(ms.group(1))
+                out["gather_bytes" if ms.group(2) == "gather"
+                    else "dynamic_slice_bytes"] += float(nbytes)
                 continue
             # ---- collectives ----
             for kind in _COLLECTIVES:

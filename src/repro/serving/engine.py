@@ -310,11 +310,17 @@ class ServingEngine:
                       "prefix_cached_pages": 0,
                       "kv_shards": self.kv_shards,
                       "pool_shard_slots": 0,
-                      "decode_collective_bytes": 0}
+                      "decode_collective_bytes": 0,
+                      "warm_cycle_s": 0.0, "warm_cycles": 0}
         self._alpha_num = 0
         self._alpha_den = 0
         self._util_sum = 0.0
         self._util_samples = 0
+        # steady-state per-cycle wall durations: dispatch->complete deltas
+        # of every cycle EXCEPT each wave's first (trace/compile-dominated
+        # at tiny scale — wall_s keeps the all-in number, warm_cycle_s is
+        # the median of these)
+        self._warm_durs: List[float] = []
         self._install_shapes = set()
         # per-cycle decode-collective payload (bytes moved by the verify
         # LSE psum per cycle), learned from the first fresh decode trace
@@ -851,7 +857,7 @@ class ServingEngine:
         # stats: only rows that were actively serving a request count
         # toward acceptance; the rest are wasted batch capacity
         self.stats["wasted_row_cycles"] += int(b - active.sum())
-        return active, out
+        return active, out, self.clock.now()
 
     def complete_cycle(self, handle) -> bool:
         """Block on a dispatched cycle's results, bank tokens, retire.
@@ -867,9 +873,13 @@ class ServingEngine:
         w = self.wave
         if handle is None or w is None:
             return False
-        active, out = handle
+        active, out, t_disp = handle
         toks = np.asarray(out["tokens"])            # retire-boundary sync
         n_out = np.asarray(out["n_out"])
+        if w.cycles > 1:
+            # steady-state sample: the wave's first cycle carries the
+            # trace/compile cost and is excluded (wall_s still counts it)
+            self._warm_durs.append(self.clock.now() - t_disp)
         cap = w.bufs.shape[1]
         self._alpha_num += int(n_out[active].sum())
         self._alpha_den += int(active.sum())
@@ -1015,6 +1025,9 @@ class ServingEngine:
         self.stats["waves"] += 1
         self.stats["alpha"] = (self._alpha_num / self._alpha_den
                                if self._alpha_den else 0.0)
+        if self._warm_durs:
+            self.stats["warm_cycle_s"] = float(np.median(self._warm_durs))
+            self.stats["warm_cycles"] = len(self._warm_durs)
         if w.pool is not None:
             self.stats["pool_peak_pages"] = max(
                 self.stats["pool_peak_pages"], w.pool.peak_in_use)

@@ -114,6 +114,57 @@ print("parity ok")
 """)
 
 
+def test_sharded_pallas_read_path_token_parity():
+    """attn_impl="pallas" vs "gather" on the kv_seq-sharded paged engine:
+    the cascade kernel runs on each shard's local pool slice inside
+    shard_map (pos_stride = global page, pos_offset = shard * page_loc,
+    LSE psum merge across shards) and per-request tokens must be
+    identical to the gather read path on the same mesh."""
+    _run(r"""
+import numpy as np, jax
+from conftest import tiny_target, tiny_drafter
+from repro.config.base import SpecConfig
+from repro.core import pipeline as pl
+from repro.core.drafter import drafter_init
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.serving.engine import ServingEngine
+
+assert jax.device_count() == 8, jax.device_count()
+VOCAB, GAMMA = 61, 4
+tcfg = tiny_target(vocab=VOCAB, dtype="float32")
+dcfg = tiny_drafter(vocab=VOCAB, gamma=GAMMA, dtype="float32",
+                    target_cfg=tcfg)
+tp = lm.lm_init(jax.random.PRNGKey(0), tcfg)
+d1 = drafter_init(jax.random.PRNGKey(1), dcfg)
+d2 = drafter_init(jax.random.PRNGKey(2), dcfg)
+spec = SpecConfig(gamma=GAMMA, top_k_branches=2, mode="d2sd")
+bundle = pl.SpecBundle(tcfg, dcfg, dcfg, spec, tp, d1, d2)
+
+rng = np.random.default_rng(1)
+reqs = [(rng.integers(3, VOCAB, size=p).astype(np.int32), n)
+        for p, n in [(11, 4), (5, 3), (8, 5), (6, 3)]]
+
+mesh = make_mesh(data=2, model=4)
+outs = {}
+for impl in ("gather", "pallas"):
+    with sh.use_sharding(mesh, dict(sh.LOGICAL_RULES, kv_seq="model")):
+        eng = ServingEngine(pl.with_attn_impl(bundle, impl),
+                            batch_size=2, seed=0, cache_impl="paged",
+                            page_size=8)
+    for p, n in reqs:
+        eng.submit(p, max_new=n)
+    stats = eng.run()
+    assert stats["kv_shards"] == 4, stats["kv_shards"]
+    outs[impl] = {r.uid: r.out.tolist() for r in eng.done}
+assert outs["pallas"] == outs["gather"], {
+    u: (outs["pallas"].get(u), outs["gather"].get(u))
+    for u in outs["gather"] if outs["pallas"].get(u) != outs["gather"][u]}
+print("sharded pallas parity ok")
+""")
+
+
 def test_pool_invariants_seed0_under_mesh():
     """The tier-1 (seed-0) chunk of the pool/radix/COW invariant suite,
     re-run with every test wrapped in a 1x4 kv_seq mesh context via the
