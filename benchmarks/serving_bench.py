@@ -544,6 +544,66 @@ def run_bytes_model(quick: bool = False) -> None:
     assert len(set(pal_cap)) == 1, (
         "kernel-path bytes must be flat in capacity", pal_cap)
 
+    # ---- rolling local layers (dense window-capped buffers) ----
+    # gather reads the buffer + materializes the [cache; block] concat +
+    # re-reads it (3x window cap); the kernel streams the buffer once,
+    # padded to the split grid. Both are window-capped — flat in pool
+    # capacity — so the claim here is 3x -> ~1x, not live-length scaling.
+    import dataclasses as _dc
+    win_sweep = [600, 1100, 2100]            # non-bk-aligned (bk=512)
+    roll_curves = {"gather": [], "pallas": []}
+    for impl in ("gather", "pallas"):
+        for w in win_sweep:
+            hcfg = _dc.replace(tcfg, layer_pattern=("local", "global"),
+                               sliding_window=w)
+            roll_curves[impl].append(bm.target_read_bytes(
+                hcfg, batch=batch, page_size=PAGE_SIZE,
+                max_pages=4 * max(win_sweep) // PAGE_SIZE,
+                cache_len=PAGE_SIZE, impl=impl))
+    for g, p in zip(roll_curves["gather"], roll_curves["pallas"]):
+        assert g["rolling_attend_read"] > 0 and "rolling_kernel_stream" in p
+        roll_g = sum(v for k2, v in g.items() if k2.startswith("rolling"))
+        assert p["rolling_kernel_stream"] < roll_g, (
+            "kernel must stream fewer rolling bytes than 3x gather",
+            p["rolling_kernel_stream"], roll_g)
+    # window-capped: capacity growth does not move rolling bytes
+    hcfg = _dc.replace(tcfg, layer_pattern=("local",), sliding_window=600)
+    flat = [bm.target_read_bytes(hcfg, batch=batch, page_size=PAGE_SIZE,
+                                 max_pages=mp, cache_len=PAGE_SIZE,
+                                 impl=i)["total"]
+            for i in ("gather", "pallas") for mp in (64, 256)]
+    assert flat[0] == flat[1] and flat[2] == flat[3], (
+        "rolling bytes must be window-capped, flat in capacity", flat)
+
+    # ---- sharded drafter feature-cache reads (shard_map hook) ----
+    # per-shard bytes divide by kv_shards on both impls; the kernel~live /
+    # gather~capacity scaling must survive sharding.
+    nsh = 4
+    sh_live = {"gather": [], "pallas": []}
+    sh_cap = {"gather": [], "pallas": []}
+    for impl in ("gather", "pallas"):
+        for clen in live_sweep:
+            sh_live[impl].append(bm.drafter_read_bytes(
+                d1, batch=batch, page_size=PAGE_SIZE, max_pages=cap_pages,
+                cache_len=clen, impl=impl, kv_shards=nsh))
+        for mp in cap_sweep:
+            sh_cap[impl].append(bm.drafter_read_bytes(
+                d1, batch=batch, page_size=PAGE_SIZE, max_pages=mp,
+                cache_len=PAGE_SIZE * 2, impl=impl, kv_shards=nsh))
+    sp = [c["total"] for c in sh_live["pallas"]]
+    sg = [c["total"] for c in sh_cap["gather"]]
+    assert all(a < b for a, b in zip(sp, sp[1:])), (
+        "sharded drafter kernel bytes must grow with live length", sp)
+    assert all(a < b for a, b in zip(sg, sg[1:])), (
+        "sharded drafter gather bytes must grow with capacity", sg)
+    assert len({c["total"] for c in sh_live["gather"]}) == 1
+    assert len({c["total"] for c in sh_cap["pallas"]}) == 1
+    unsh = bm.drafter_read_bytes(
+        d1, batch=batch, page_size=PAGE_SIZE, max_pages=cap_pages,
+        cache_len=live_sweep[0], impl="pallas", kv_shards=1)
+    assert sh_live["pallas"][0]["total"] * nsh == unsh["total"], (
+        "per-shard kernel bytes must be the unsharded figure / kv_shards")
+
     hlo = {
         "gather": _cycle_hlo_stats(bundle, batch, cap),
         "pallas": _cycle_hlo_stats(pl.with_attn_impl(bundle, "pallas"),
@@ -572,6 +632,10 @@ def run_bytes_model(quick: bool = False) -> None:
                    "capacity_sweep_pages": cap_sweep},
         "analytic_vs_live": curves,
         "analytic_vs_capacity": cap_curves,
+        "rolling_vs_window": {"window_sweep": win_sweep, **roll_curves},
+        "sharded_drafter": {"kv_shards": nsh,
+                            "analytic_vs_live": sh_live,
+                            "analytic_vs_capacity": sh_cap},
         "hlo_decode_cycle": hlo,
         "scaling": {
             "pallas_grows_with_live": True,
@@ -579,6 +643,11 @@ def run_bytes_model(quick: bool = False) -> None:
             "gather_grows_with_capacity": True,
             "pallas_flat_in_capacity": True,
             "gather_over_pallas_at_min_live": ratio,
+            "rolling_kernel_under_3x_gather": True,
+            "rolling_flat_in_capacity": True,
+            "sharded_drafter_pallas_grows_with_live": True,
+            "sharded_drafter_gather_grows_with_capacity": True,
+            "sharded_drafter_per_shard_division": True,
         },
     })
 

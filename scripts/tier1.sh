@@ -8,10 +8,15 @@
 #   scripts/tier1.sh --stress   # randomized pool/radix/COW invariant suite:
 #                               # the fixed tier-1 seed PLUS the reroll seeds
 #                               # (marked `slow`, see tests/test_pool_invariants.py)
-#   scripts/tier1.sh --pallas   # only the pallas-marked interpret-mode kernel
-#                               # tests (ref-oracle sweeps + the attn_impl
-#                               # gather-vs-pallas token-parity gate) — the
-#                               # complement of --fast's "not pallas"
+#   scripts/tier1.sh --pallas   # the pallas-marked interpret-mode kernel
+#                               # tests (ref-oracle sweeps incl. the rolling
+#                               # non-aligned-capacity regression + the
+#                               # attn_impl gather-vs-pallas token-parity
+#                               # gate, sliding-window hybrid included) PLUS
+#                               # the 8-device sharded read-path parity
+#                               # subprocess tests (sharded pallas engine +
+#                               # sharded drafter reads) — the complement of
+#                               # --fast's "not pallas"
 #   scripts/tier1.sh --mesh     # re-run the suite on an 8-device host mesh
 #                               # (XLA_FLAGS=--xla_force_host_platform_device_count=8,
 #                               # REPRO_MESH=1x4: every test wrapped in a
@@ -43,6 +48,11 @@ if [[ "${1:-}" == "--stress" ]]; then
 fi
 if [[ "${1:-}" == "--pallas" ]]; then
   shift
-  exec python -m pytest -x -q -m pallas "$@"
+  # the sharded read-path parity tests live in test_sharded_serving.py
+  # (subprocess 8-device meshes, not pallas-marked — they cover BOTH
+  # read_impls): select them alongside the pallas marker sweeps
+  python -m pytest -x -q -m pallas "$@"
+  exec python -m pytest -x -q tests/test_sharded_serving.py \
+    -k "pallas_read_path or drafter_read"
 fi
 exec python -m pytest -x -q "$@"

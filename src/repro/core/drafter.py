@@ -50,8 +50,11 @@ class DrafterConfig:
     # Feature-cache read path, mirroring ModelConfig.attn_impl (jit-static
     # via SpecBundle aux_data): "pallas" reads paged feature pools through
     # the cascade kernel per layer instead of one dense pool_view gather.
-    # Dense caches and kv_seq-sharded runs keep the gather path (sharded
-    # drafter reads stay GSPMD — ROADMAP open item).
+    # kv_seq-sharded paged pools go through the shard_map read hook
+    # (spdecode.sharded_paged_cache_attend) with read_impl=attn_impl —
+    # each shard reads only its local pool slice either way, so sharded
+    # engines draft without the per-cycle dense GSPMD gather. Dense
+    # caches keep the plain gather/chunked path.
     attn_impl: str = "gather"
 
     def __post_init__(self):
@@ -205,14 +208,20 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
 
     from repro.distributed import spdecode as _sp
     paged = kvc.is_paged(feat_cache)
+    axis = _sp.kv_seq_axis()
     # Kernelized paged read (dcfg.attn_impl, jit-static): every layer calls
     # the cascade kernel on its pool slice + the shared page table — no
     # dense-sized pool_view gather per cycle. Block slots sit at positions
     # >= feat_len, so the kernel's causal kpos<=q_abs clamp is subsumed by
     # its kpos<feat_len mask and both paths attend identically.
-    use_pallas = (paged and dcfg.attn_impl == "pallas"
-                  and _sp.kv_seq_axis() is None)
-    if paged and not use_pallas:
+    use_pallas = (paged and dcfg.attn_impl == "pallas" and axis is None)
+    # kv_seq-sharded feature pools: the same shard_map hook the verify
+    # read uses (per-shard local pool reads — gather of the LOCAL slice or
+    # the pos_stride/pos_offset kernel — merged by the fp32 LSE psum), so
+    # sharded engines draft without a per-cycle dense GSPMD gather.
+    use_sharded = (paged and axis is not None
+                   and feat_cache["k"].shape[-3] % _sp.kv_seq_shards() == 0)
+    if paged and not (use_pallas or use_sharded):
         # logical per-row view gathered once for all drafter layers;
         # garbage beyond feat_len is masked below exactly like the dense
         # cache's zero padding, so both layouts attend identically
@@ -222,14 +231,15 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
         ctx_k, ctx_v = feat_cache["k"], feat_cache["v"]   # [L,P,page,Hkv,Dh]
     else:
         ctx_k, ctx_v = feat_cache["k"], feat_cache["v"]
-    cap = (kvc.logical_len(feat_cache) if use_pallas else ctx_k.shape[2])
+    cap = (kvc.logical_len(feat_cache) if (use_pallas or use_sharded)
+           else ctx_k.shape[2])
     tq = t
     if block_mask.ndim == 2:
         blk = jnp.broadcast_to(block_mask[None], (b, tq, t))
     else:
         blk = block_mask
     full_mask = None
-    if not use_pallas:
+    if not (use_pallas or use_sharded):
         # context visibility: feature entries < feat_len (per-example)
         ctx_ok = (jnp.arange(cap)[None, None, :]
                   < feat_len[:, None, None])                 # [B,1,cap]
@@ -237,7 +247,6 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
         full_mask = jnp.concatenate([ctx_ok, blk], axis=-1)
 
     spdecode = _sp
-    axis = spdecode.kv_seq_axis()
     use_sp = False
     if axis is not None and not paged:
         from repro.distributed.sharding import active_mesh
@@ -259,6 +268,13 @@ def drafter_forward(p, dcfg: DrafterConfig, block_tokens, feat_cache,
                 q, ctx_k[i].astype(k.dtype), ctx_v[i].astype(v.dtype),
                 feat_cache["pt"], k, v, cache_len=feat_len,
                 q_abs=positions, tree_mask=blk, layout="BTHD")
+        elif use_sharded:
+            y = spdecode.sharded_paged_cache_attend(
+                q, ctx_k[i].astype(k.dtype), ctx_v[i].astype(v.dtype),
+                feat_cache["pt"], k, v, cache_len=feat_len,
+                q_abs=positions, attn_softcap=None, blk_mask=blk,
+                page_size=feat_cache["k"].shape[-3], kv_chunk=kv_chunk,
+                read_impl=dcfg.attn_impl)
         elif use_sp:
             y = spdecode.sharded_cache_attend(
                 q, ctx_k[i].astype(k.dtype),

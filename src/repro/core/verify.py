@@ -160,14 +160,17 @@ class VerifierBackend:
 
     Backends are also read-path-transparent: with
     ``ModelConfig.attn_impl="pallas"`` the tree-verify forward reads
-    paged caches through ``kernels.ops.cascade_attention_paged`` (page
-    pool + page table handed to the kernel, no per-cycle dense
-    ``pool_view`` gather; interpret mode off-TPU) instead of the default
-    "gather" view — selected per-bundle via
-    ``pipeline.with_attn_impl(bundle, impl)``; the config field is a
-    jit-static so both variants coexist in one process. Per-request
-    tokens are identical across read paths (asserted by the tier-1
-    ``pallas`` marker tests, single-device and sharded)."""
+    paged GLOBAL layers through ``kernels.ops.cascade_attention_paged``
+    (page pool + page table handed to the kernel, no per-cycle dense
+    ``pool_view`` gather; interpret mode off-TPU) and sliding-window
+    ROLLING local layers through the dense cascade kernel over their
+    rolling buffers (true-capacity position recovery) — selected
+    per-bundle via ``pipeline.with_attn_impl(bundle, impl)``; the config
+    field is a jit-static so both variants coexist in one process.
+    Recurrent/rwkv blocks have no KV cache and are unaffected. Per-
+    request tokens are identical across read paths (asserted by the
+    tier-1 ``pallas`` marker tests, single-device and sharded, including
+    the local/global hybrid target)."""
 
     name: str = "?"
 

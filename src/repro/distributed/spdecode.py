@@ -175,8 +175,11 @@ def sharded_paged_cache_attend(q, pool_k, pool_v, table, blk_k, blk_v, *,
     page ids (PAGE_SENTINEL rows masked out by ``cache_len``);
     blk_k/v: [B,Tblk,Hkv,Dh]; cache_len [B]; q_abs [B,Tq] or [Tq].
 
-    Non-rolling global-attention layers only (the prefix cache's gating);
-    ``merge_dtype`` defaults to float32 — see :func:`_axis_lse_merge`.
+    Non-rolling global-attention reads only (the prefix cache's gating) —
+    serves both the verifier's paged KV layers and the drafter's paged
+    feature caches (``core.drafter.drafter_forward``, which are always
+    non-rolling and windowless); ``merge_dtype`` defaults to float32 —
+    see :func:`_axis_lse_merge`.
 
     ``read_impl`` selects how each shard reads its local pool slice:
     "gather" (default) materializes the local logical view via

@@ -48,6 +48,13 @@ def _phase1_kernel(cache_len_ref, q_abs_ref,                  # SMEM
                    racc, rm, rl,                              # scratch
                    *, bk, nk_inner, tq, window, softcap, scale, rolling,
                    cap):
+    """``cap`` is the TRUE buffer capacity (``s_len``), NOT the padded
+    grid extent: rolling position recovery ``kpos = last - rem(last -
+    slot, cap)`` inverts the writer's ``slot = pos % cap``, so any other
+    modulus recovers wrong absolute positions. Slots the split padding
+    added (``slot >= cap``) hold no data and are masked dead explicitly —
+    without that mask a padded slot at ``last + cap`` would alias the
+    rolling recovery back onto a live position."""
     b = pl.program_id(0)
     s = pl.program_id(2)       # split index
     jj = pl.program_id(3)      # inner kv step within the split
@@ -69,15 +76,20 @@ def _phase1_kernel(cache_len_ref, q_abs_ref,                  # SMEM
     clen = cache_len_ref[b]
     base = (s * nk_inner + jj) * bk
     slot = base + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+    live = slot < cap          # padded slots carry no cache data
     qpos = q_abs_ref[pl.dslice(b * tq, tq)]                  # [tq]
     qp = qpos[:, None]
     if rolling:
+        # slot j holds the largest t < clen with t % cap == j; rem (not
+        # mod) is safe: last - slot < 0 only pre-wrap (clen <= cap, so
+        # last < cap <= any candidate), where the recovered kpos > last
+        # dies on kpos < clen exactly like the oracle's kpos < 0.
         last = clen - 1
         kpos = last - jax.lax.rem(last - slot, cap)
-        ok = (kpos >= 0) & (kpos < clen) & (kpos <= qp)
+        ok = live & (kpos >= 0) & (kpos < clen) & (kpos <= qp)
     else:
         kpos = slot
-        ok = (kpos < clen) & (kpos <= qp)
+        ok = live & (kpos < clen) & (kpos <= qp)
     if window is not None:
         ok &= kpos > (qp - window)
     sc = jnp.where(ok, sc, NEG_INF)
@@ -102,15 +114,23 @@ def cascade_phase1(q, cache_k, cache_v, *, cache_len, q_abs, window=None,
                    attn_softcap=None, scale=None, rolling=False,
                    n_splits=8, bk=512, interpret=False):
     """q [B,Hq,Tq,D]; cache [B,Hkv,S,D] -> flash partials per split:
-    acc [B,Hq,ns,Tq,D], m/l [B,Hq,ns,Tq]."""
+    acc [B,Hq,ns,Tq,D], m/l [B,Hq,ns,Tq].
+
+    Split-count invariant: the effective split count is
+    ``min(n_splits, ceil(S / bk))`` — the cache is PADDED up to a
+    ``n_splits * bk`` multiple instead of degrading the split count when
+    ``S`` is not block-aligned (prime-ish capacities used to collapse
+    split-K parallelism to 1). Padded slots are dead by construction:
+    the kernel masks ``slot >= S`` before any position recovery, so the
+    padding is invisible to both rolling and non-rolling semantics and
+    ``cap`` (the rolling modulus) stays the TRUE capacity ``S``.
+    """
     b, hq, tq, d = q.shape
     hkv, s_len = cache_k.shape[1], cache_k.shape[2]
     g = hq // hkv
     scale = scale if scale is not None else d ** -0.5
     bk = min(bk, s_len)
-    n_splits = max(1, min(n_splits, s_len // bk))
-    while s_len % (n_splits * bk) and n_splits > 1:
-        n_splits -= 1
+    n_splits = max(1, min(n_splits, -(-s_len // bk)))
     pk = (-s_len) % (n_splits * bk)
     if pk:
         cache_k = jnp.pad(cache_k, ((0, 0), (0, 0), (0, pk), (0, 0)))
@@ -125,7 +145,7 @@ def cascade_phase1(q, cache_k, cache_v, *, cache_len, q_abs, window=None,
 
     kernel = functools.partial(
         _phase1_kernel, bk=bk, nk_inner=nk_inner, tq=tq, window=window,
-        softcap=attn_softcap, scale=scale, rolling=rolling, cap=s_pad)
+        softcap=attn_softcap, scale=scale, rolling=rolling, cap=s_len)
 
     out_shape = [
         jax.ShapeDtypeStruct((b, hq, n_splits, tq, d), jnp.float32),

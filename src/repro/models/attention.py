@@ -21,9 +21,20 @@ global layers straight to ``kernels.ops.cascade_attention_paged`` (pool
 buffers + page table, no dense gather — see ``models/blocks.py``).
 ``attn_impl`` is a jit-static carried by the config (SpecBundle registers
 configs as pytree aux_data), token-identical by tier-1 assertion, and
-falls back to interpret mode off-TPU. Sliding-window ROLLING local
-layers always use the gather path; the kv_seq-sharded verify honors it
-inside ``shard_map`` (``distributed/spdecode.py``).
+falls back to interpret mode off-TPU.
+
+Coverage matrix under ``attn_impl="pallas"``:
+
+* paged GLOBAL layers — ``cascade_attention_paged`` on pool + table;
+* sliding-window ROLLING local layers — the DENSE cascade kernel over
+  the rolling buffer with ``rolling=True`` and the TRUE capacity as
+  position-recovery modulus (``models/blocks.py``);
+* kv_seq-sharded paged reads (verify KV AND drafter feature caches) —
+  the per-shard kernel inside ``shard_map``
+  (``distributed/spdecode.sharded_paged_cache_attend``);
+* still on gather: recurrent/rwkv blocks (no KV cache to kernelize),
+  cross-attention, dense-cache engines under a kv_seq mesh, and
+  GSPMD prefill.
 """
 from __future__ import annotations
 

@@ -300,19 +300,27 @@ def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
                             attn_softcap=cfg.attn_softcap, blk_mask=blk_mask,
                             page_size=page_size, kv_chunk=kv_chunk,
                             read_impl=cfg.attn_impl)
-                if y is None and cfg.attn_impl == "pallas" and axis is None \
-                        and not rolling:
+                if y is None and cfg.attn_impl == "pallas" and axis is None:
                     # kernelized read path (cfg.attn_impl, a jit-static):
                     # cascade kernels consume the cache buffers directly —
-                    # paged: pool + page table, no per-cycle pool_view
-                    # gather. Rolling local layers stay on the gather path
-                    # (the dense kernel's cache padding breaks rolling
-                    # position recovery at non-block-aligned capacities).
+                    # paged global layers: pool + page table, no per-cycle
+                    # pool_view gather; sliding-window local layers: the
+                    # dense kernel over the rolling buffer (cap = true
+                    # buffer capacity; split padding is masked dead inside
+                    # the kernel, so non-block-aligned window capacities
+                    # recover exact rolling positions).
                     from repro.kernels import ops as kops
                     blk_mask = extra_mask
                     if blk_mask is None:
                         tb = k.shape[1]
                         blk_mask = jnp.tril(jnp.ones((tb, tb), bool))
+                        if window is not None:
+                            # mirror attend_cache_plus_block's default
+                            # in-block window masking (tokens more than
+                            # `window` apart inside one block)
+                            ji = jnp.arange(tb)[None, :]
+                            ii = jnp.arange(tb)[:, None]
+                            blk_mask &= ji > (ii - window)
                     qa2 = jnp.broadcast_to(
                         jnp.asarray(q_abs, jnp.int32).reshape(-1, q.shape[1]),
                         (q.shape[0], q.shape[1]))
@@ -329,7 +337,7 @@ def block_apply(p, x, cfg: ModelConfig, spec: BlockSpec2, *,
                             state["v"].astype(v.dtype), k, v,
                             cache_len=cache_len, q_abs=qa2,
                             tree_mask=blk_mask, window=window,
-                            attn_softcap=cfg.attn_softcap, rolling=False,
+                            attn_softcap=cfg.attn_softcap, rolling=rolling,
                             layout="BTHD")
                 if y is None:
                     ck, cv = cache_view()

@@ -78,11 +78,14 @@ refcounts, the radix tree and the page tables keep counting GLOBAL
 pages, arrays keep their global logical shapes (all geometry asserts
 hold verbatim), and :func:`pool_scatter` / :func:`copy_page` writes stay
 plain ``jnp`` ops that GSPMD partitions. The decode read path is the
-exception: the paged cascade verify runs under ``shard_map``
-(``distributed.spdecode.sharded_paged_cache_attend``), where each shard
-gathers its local ``pool_view``, masks by the ABSOLUTE positions its
-non-contiguous slots represent, and one float32 LSE ``psum`` merges the
-per-shard attention stats — token-identical to the single-device path.
+exception: paged cascade reads — the verify KV layers AND the drafter
+feature caches (``core.drafter.drafter_forward``) — run under
+``shard_map`` (``distributed.spdecode.sharded_paged_cache_attend``),
+where each shard reads only its local pool slice (``pool_view`` gather
+or the pos_stride/pos_offset cascade kernel, per ``attn_impl``), masks
+by the ABSOLUTE positions its non-contiguous slots represent, and one
+float32 LSE ``psum`` merges the per-shard attention stats —
+token-identical to the single-device path.
 Borrowed pools carry this placement across wave turnover untouched
 (``core.state.capture_pools`` / ``adopt_pools``).
 """

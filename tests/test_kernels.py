@@ -164,6 +164,78 @@ def test_cascade_ragged_window_boundaries(case):
                                rtol=3e-5, atol=3e-5)
 
 
+# Rolling-buffer position recovery at ADVERSARIAL capacities: the modulus
+# ``cap`` the kernel recovers absolute positions with must be the TRUE
+# buffer capacity, not the split-padded extent — every capacity below is
+# non-power-of-two and most are non-bk-aligned (bk=64), which is exactly
+# where the old ``cap=s_pad`` plumbing recovered wrong positions.
+ROLLING_CASES = [
+    # (cap, window, cache_lens)  — lens mix pre-wrap (len <= cap) and
+    # full wraparound (len > cap, every slot live and rolled)
+    (97, 97, (40, 150)),          # prime cap, pre-wrap + wrapped
+    (97, 50, (96, 300)),          # window < cap
+    (100, 100, (100, 257)),       # len == cap boundary + deep wrap
+    (131, 96, (70, 200)),         # prime, non-bk-aligned window
+    (505, 505, (505, 711)),       # > bk, straddles 7.9 blocks
+    (509, 200, (300, 1000)),      # prime > bk, deep wrap, small window
+    (24, 24, (5, 30)),            # cap < bk (single sub-block)
+]
+
+
+@pytest.mark.parametrize("case", ROLLING_CASES)
+def test_cascade_rolling_nonaligned_capacity_matches_ref(case):
+    """Dense cascade kernel vs oracle over ROLLING buffers at
+    non-block-aligned capacities x window sizes x ragged cache_len
+    (including len > cap wraparound) — the tentpole bug regression."""
+    cap, window, cache_lens = case
+    b, hq, hkv, tq, d = len(cache_lens), 4, 2, 6, 32
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2 ** 31), 5)
+    q = _rand(ks[0], (b, hq, tq, d), jnp.float32)
+    ck = _rand(ks[1], (b, hkv, cap, d), jnp.float32)
+    cv = _rand(ks[2], (b, hkv, cap, d), jnp.float32)
+    bkv = _rand(ks[3], (b, hkv, tq, d), jnp.float32)
+    bvv = _rand(ks[4], (b, hkv, tq, d), jnp.float32)
+    cache_len = jnp.asarray(cache_lens)
+    q_abs = cache_len[:, None] + jnp.arange(tq)[None, :]
+    tree_mask = jnp.tril(jnp.ones((tq, tq), bool))
+    o = ops.cascade_attention(q, ck, cv, bkv, bvv, cache_len=cache_len,
+                              q_abs=q_abs, tree_mask=tree_mask,
+                              window=window, rolling=True, n_splits=4,
+                              bk=64, interpret=True, layout="BHTD")
+    o_ref = ref.cascade_attention_ref(
+        q, ck, cv, bkv, bvv, cache_len=cache_len, q_abs=q_abs,
+        tree_mask=tree_mask, window=window, rolling=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_cascade_phase1_split_count_invariant():
+    """cascade_phase1 pads the cache up to the requested split grid
+    instead of degrading split-K: effective splits ==
+    min(n_splits, ceil(S / bk)) even at prime-ish capacities (the old
+    divisibility loop collapsed e.g. S=509, bk=64 to ONE split)."""
+    from repro.kernels import cascade_attention as casc
+    b, hq, hkv, tq, d = 1, 2, 2, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    for s, n_req, bk, want in [(509, 8, 64, 8),   # prime: used to be 1
+                               (505, 4, 64, 4),   # non-aligned
+                               (512, 8, 64, 8),   # aligned: unchanged
+                               (100, 8, 64, 2),   # short cache clamps
+                               (24, 4, 64, 1)]:   # cap < bk
+        q = _rand(ks[0], (b, hq, tq, d), jnp.float32)
+        ck = _rand(ks[1], (b, hkv, s, d), jnp.float32)
+        cv = _rand(ks[2], (b, hkv, s, d), jnp.float32)
+        acc, m, l = casc.cascade_phase1(
+            q, ck, cv, cache_len=jnp.array([s]),
+            q_abs=jnp.arange(tq)[None] + s, n_splits=n_req, bk=bk,
+            interpret=True)
+        got = acc.shape[2]
+        assert got == want == min(n_req, -(-s // min(bk, s))), (
+            s, n_req, bk, got, want)
+        assert m.shape[2] == l.shape[2] == got
+
+
 PAGED_CASES = [
     # (B, Hq, Hkv, Tq, page, mp, n_phys, cache_lens, window)
     (2, 4, 2, 12, 64, 8, 20, (512, 256), None),     # page-aligned
@@ -367,9 +439,10 @@ def test_attn_impl_token_parity_generate(cache_impl):
 
 def test_attn_impl_token_parity_sliding_window_target():
     """Same parity on a mixed local/global target: paged global layers go
-    through the kernel, sliding-window local layers stay on the gather
-    path (rolling-buffer positions), and the mix must still be
-    token-identical."""
+    through the paged kernel, sliding-window local layers through the
+    DENSE kernel over their rolling buffers (true-capacity modulus,
+    window=24 deliberately non-block-aligned), and the mix must still be
+    token-identical end to end."""
     from repro.core import pipeline as pl
     bundle = _parity_bundle(layer_pattern=("local", "global"),
                             sliding_window=24)

@@ -165,6 +165,54 @@ print("sharded pallas parity ok")
 """)
 
 
+def test_sharded_drafter_read_parity():
+    """Drafter feature-cache reads under a kv_seq mesh go through the
+    SAME shard_map hook as the verify read (ROADMAP item d closed): a
+    paged ``drafter_forward`` on a 4-way kv_seq mesh must produce logits
+    identical to the meshless gather path, for both read_impls, and the
+    shard_map hook must actually engage (its LSE-psum payload shows up
+    in PAYLOAD_TRACE)."""
+    _run(r"""
+import numpy as np, jax
+import jax.numpy as jnp
+from conftest import tiny_target, tiny_drafter
+from repro.core import drafter as dr
+from repro.distributed import sharding as sh
+from repro.distributed import spdecode as sp
+from repro.launch.mesh import make_mesh
+
+assert jax.device_count() == 8, jax.device_count()
+VOCAB, GAMMA = 61, 4
+tcfg = tiny_target(vocab=VOCAB, dtype="float32")
+dcfg = tiny_drafter(vocab=VOCAB, gamma=GAMMA, dtype="float32",
+                    target_cfg=tcfg)
+p = dr.drafter_init(jax.random.PRNGKey(1), dcfg)
+
+B, PAGE, MP = 2, 8, 6
+cache = dr.init_feat_cache(dcfg, B, PAGE * MP, dtype=jnp.float32,
+                           cache_impl="paged", page_size=PAGE)
+rng = np.random.default_rng(0)
+feats = jnp.asarray(rng.standard_normal(
+    (B, 13, dcfg.target_feature_dim)), jnp.float32)
+pos = jnp.broadcast_to(jnp.arange(13)[None], (B, 13))
+n_new = jnp.array([13, 9])                  # ragged, page-straddling
+cache = dr.extend_feat_cache(p, dcfg, cache, feats, pos, n_new)
+blk = dr.dflash_block(jnp.array([5, 7]), GAMMA, dcfg.mask_token)
+
+ref = np.asarray(dr.drafter_forward(p, dcfg, blk, cache))
+mesh = make_mesh(data=2, model=4)
+for impl in ("gather", "pallas"):
+    dci = __import__("dataclasses").replace(dcfg, attn_impl=impl)
+    with sh.use_sharding(mesh, dict(sh.LOGICAL_RULES, kv_seq="model")):
+        sp.PAYLOAD_TRACE.clear()
+        out = np.asarray(dr.drafter_forward(p, dci, blk, cache))
+        assert len(sp.PAYLOAD_TRACE) == dcfg.num_layers, (
+            impl, len(sp.PAYLOAD_TRACE))   # shard_map hook engaged
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+print("sharded drafter read parity ok")
+""")
+
+
 def test_pool_invariants_seed0_under_mesh():
     """The tier-1 (seed-0) chunk of the pool/radix/COW invariant suite,
     re-run with every test wrapped in a 1x4 kv_seq mesh context via the
